@@ -1,0 +1,32 @@
+"""Fig 2 + Obs 1 — the Capacity Trap: concurrency sweep for DS-8B on one
+H200. Throughput rises with concurrency only until KV saturates; past that,
+preemption storms collapse it."""
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.core import perf_model as pm
+
+from benchmarks._common import emit, reasoning_requests, run_to_completion, \
+    sim_engine
+
+
+def run(n_requests: int = 400):
+    cfg = DS_DISTILL_8B
+    plan = pm.ParallelismPlan()
+    reqs = reasoning_requests(n_requests, osl_cap=8000, seed=1)
+    rows = []
+    for max_seqs in (64, 256, 1024, 2048):
+        eng = sim_engine(cfg, plan, max_seqs=max_seqs, admission="naive")
+        s = run_to_completion(eng, reqs)
+        scale = f"n={n_requests};1xH200;sim"
+        rows.append(emit(f"capacity_trap/tput_tok_s/seqs={max_seqs}",
+                         round(s["gen_throughput_tok_s"], 1), scale))
+        rows.append(emit(f"capacity_trap/peak_kv_util/seqs={max_seqs}",
+                         round(s["peak_kv_util"], 3), scale))
+        rows.append(emit(f"capacity_trap/preemptions/seqs={max_seqs}",
+                         s["preemptions"], scale))
+        rows.append(emit(f"capacity_trap/recomputed_tokens/seqs={max_seqs}",
+                         s["recomputed_tokens"], scale))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

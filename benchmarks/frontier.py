@@ -1,0 +1,47 @@
+"""Fig 10 + Obs 6 — frontier dense-vs-sparse divergence: 405B wants TP8 (PP8
+catastrophic); R1-671B (MoE+MLA, fp8 weights) wants hybrid PP."""
+from repro.configs.paper_models import DEEPSEEK_R1_671B
+from repro.configs.registry import get_config
+from repro.core import perf_model as pm, planner
+
+from benchmarks._common import emit
+
+
+def run():
+    rows = []
+    wl = planner.Workload()
+    l405 = get_config("llama3-405b")
+    lab405 = {e.label(): e for e in planner.plan(l405, pm.H200, 8, wl)}
+    for k in ("TP=8", "PP=8", "TP=4+PP=2", "TP=2+PP=4"):
+        e = lab405[k]
+        rows.append(emit(f"frontier/405b/completion_s/{k}",
+                         round(e.completion_s, 0) if e.feasible else "INF",
+                         "paper: TP8=986s, PP8=7537s (7.6x)"))
+    rows.append(emit("frontier/405b/pp8_over_tp8",
+                     round(lab405["PP=8"].completion_s
+                           / lab405["TP=8"].completion_s, 2),
+                     "paper 7.6x"))
+
+    r1 = DEEPSEEK_R1_671B
+    labr1 = {e.label(): e
+             for e in planner.plan(r1, pm.H200, 8, wl, dtype_bytes=1)}
+    for k in ("TP=8", "TP=2+PP=4", "TP=4+PP=2", "PP=8"):
+        e = labr1[k]
+        rows.append(emit(f"frontier/r1/completion_s/{k}",
+                         round(e.completion_s, 0) if e.feasible else "INF",
+                         "paper: PP4+TP2=1663s < TP8=2047s"))
+    rows.append(emit("frontier/r1/tp8_over_hybrid",
+                     round(labr1["TP=8"].completion_s
+                           / min(labr1["TP=2+PP=4"].completion_s,
+                                 labr1["TP=4+PP=2"].completion_s), 2),
+                     "paper 1.23x"))
+    # the MLA anomaly (Fig 11c): R1 KV/token vs dense peers
+    rows.append(emit("frontier/kv_per_token_bytes/405b",
+                     l405.kv_bytes_per_token(2), "dense GQA"))
+    rows.append(emit("frontier/kv_per_token_bytes/r1",
+                     r1.kv_bytes_per_token(2), "MLA latent: ~9x smaller"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

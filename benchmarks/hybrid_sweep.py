@@ -1,0 +1,26 @@
+"""Fig 7 + Obs 5 — hybrid-parallelism sweep on a fixed 8-GPU budget for
+14B/32B: right-sized TP (DP4xTP2) wins at 32B; DP-dominant wins at 14B."""
+from repro.configs.paper_models import DS_DISTILL_14B, DS_DISTILL_32B
+from repro.core import perf_model as pm, planner
+
+from benchmarks._common import emit
+
+
+def run():
+    rows = []
+    for name, cfg in (("14b", DS_DISTILL_14B), ("32b", DS_DISTILL_32B)):
+        ests = planner.plan(cfg, pm.H200, 8)
+        for e in ests:
+            if e.feasible:
+                rows.append(emit(
+                    f"hybrid_sweep/{name}/completion_s/{e.label()}",
+                    round(e.completion_s, 1),
+                    f"conc/replica={e.concurrency}"))
+        best = ests[0]
+        rows.append(emit(f"hybrid_sweep/{name}/best", best.label(),
+                         "paper: 14B->DP8 family, 32B->DP4+TP2"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig 14/15 + Obs 8 — KV growth linearity and the Reasoning Cliff: the OSL
+at which decode KV exhausts HBM, and the batch size at which the cliff moves
+into the *prefill* phase (admission stalls)."""
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.configs.registry import get_config
+from repro.core import perf_model as pm
+
+from benchmarks._common import emit, sim_engine
+
+
+def run():
+    rows = []
+    cfg8 = DS_DISTILL_8B
+    for osl in (1000, 5000, 20000):
+        rows.append(emit(f"kv_scaling/8b/decode_kv_gb/osl={osl}",
+                         round(cfg8.kv_bytes_per_token(2) * osl / 1e9, 2),
+                         "linear in OSL (Fig 15b)"))
+    l405 = get_config("llama3-405b")
+    cap = pm.kv_capacity_tokens(l405, pm.ParallelismPlan(tp=8), pm.H200)
+    rows.append(emit("kv_scaling/405b/tp8_kv_capacity_tokens", cap,
+                     "8xH200 pooled"))
+    for bs in (128, 512, 2048):
+        # tokens of prompt admitted before the pool fills (cliff-in-prefill)
+        isl, osl = 105, 6800
+        fits = cap // (isl + osl)
+        cliff = "decode" if bs <= fits else "prefill(admission-stalled)"
+        rows.append(emit(f"kv_scaling/405b/cliff_phase/bs={bs}", cliff,
+                         f"fits={fits} concurrent reasoning requests"))
+
+    # engine-level: the same cliff dynamically (scaled)
+    eng = sim_engine(cfg8, pm.ParallelismPlan(), max_seqs=4096,
+                     admission="naive")
+    capacity = eng.alloc.n_pages * 16
+    big = capacity // 3
+    for _ in range(12):
+        eng.submit(big // 8, big, arrival=0.0)
+    s = eng.run(max_steps=200_000).summary()
+    rows.append(emit("kv_scaling/engine/peak_kv", round(s["peak_kv_util"], 3),
+                     "saturates during long decode"))
+    rows.append(emit("kv_scaling/engine/preemptions", s["preemptions"],
+                     "cliff response (recompute)"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig 3 + Obs 2 — TTFT/TPOT decoupling and E2E convexity: TTFT falls with
+concurrency (admission), TPOT rises (bandwidth+capacity dilution); E2E has an
+interior sweet spot."""
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.core import perf_model as pm
+
+from benchmarks._common import emit, reasoning_requests, run_to_completion, \
+    sim_engine
+
+
+def run(n_requests: int = 400):
+    cfg = DS_DISTILL_8B
+    plan = pm.ParallelismPlan()
+    reqs = reasoning_requests(n_requests, osl_cap=8000, seed=2)
+    rows, e2e = [], {}
+    sweep = (48, 192, 768, 2048)
+    for max_seqs in sweep:
+        eng = sim_engine(cfg, plan, max_seqs=max_seqs, admission="naive")
+        s = run_to_completion(eng, reqs)
+        scale = f"n={n_requests};1xH200;sim"
+        rows.append(emit(f"latency/ttft_p50_s/seqs={max_seqs}",
+                         round(s["ttft_s"]["p50"], 2), scale))
+        rows.append(emit(f"latency/tpot_mean_ms/seqs={max_seqs}",
+                         round(s["tpot_s"]["mean"] * 1e3, 2), scale))
+        rows.append(emit(f"latency/e2e_p50_s/seqs={max_seqs}",
+                         round(s["e2e_s"]["p50"], 2), scale))
+        e2e[max_seqs] = s["e2e_s"]["p50"]
+    sweet = min(e2e, key=e2e.get)
+    rows.append(emit("latency/e2e_sweet_spot_seqs", sweet,
+                     "interior optimum = paper's ~2K point (scaled)"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig 12/13 + Obs 7 — prefill vs decode resource divergence, from the
+analytical model (H200) AND measured from the compiled dry-run artifacts
+(v5e): prefill compute-bound, decode memory-bound; arithmetic intensity
+collapse."""
+import glob
+import json
+
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.configs.registry import get_config
+from repro.core import perf_model as pm
+
+from benchmarks._common import emit
+
+
+def run():
+    rows = []
+    cfg = DS_DISTILL_8B
+    plan = pm.ParallelismPlan()
+    for toks in (512, 2048, 8192):
+        p = pm.prefill_step_time(cfg, toks, plan, pm.H200)
+        rows.append(emit(f"phase/prefill/compute_over_memory/toks={toks}",
+                         round(p["compute"] / max(p["memory"], 1e-12), 2),
+                         "(>1 => compute-bound prefill)"))
+    for batch in (32, 128, 512):
+        d = pm.decode_step_time(cfg, batch, 3500, plan, pm.H200)
+        rows.append(emit(f"phase/decode/memory_over_compute/batch={batch}",
+                         round(d["memory"] / max(d["compute"], 1e-12), 1),
+                         "(>1 => bandwidth-bound decode)"))
+    # arithmetic intensity (FLOPs/byte): prefill reuses weights across tokens
+    n, w = cfg.active_param_count(), cfg.param_count() * 2
+    rows.append(emit("phase/arith_intensity/prefill_2048",
+                     round(2 * n * 2048 / w, 0), "FLOPs per weight-byte"))
+    rows.append(emit("phase/arith_intensity/decode_b128",
+                     round(2 * n * 128 / (w + 128 * 3500
+                                          * cfg.kv_bytes_per_token(2)), 2),
+                     "collapse (paper §VI-A)"))
+
+    # measured from the v5e dry-run artifacts (same arch family: llama3.2-3b)
+    for shape, kind in (("prefill_32k", "prefill"), ("decode_32k", "decode")):
+        f = glob.glob(f"experiments/dryrun/llama3.2-3b__{shape}__single__"
+                      f"baseline.json")
+        if not f:
+            continue
+        d = json.load(open(f[0]))
+        r = d["roofline"]
+        rows.append(emit(f"phase/dryrun_v5e/{kind}/bottleneck",
+                         r["bottleneck"], "from compiled HLO (llama3.2-3b)"))
+        rows.append(emit(
+            f"phase/dryrun_v5e/{kind}/t_compute_over_t_memory",
+            round(r["t_compute_s"] / max(r["t_memory_s"], 1e-12), 3),
+            "roofline terms"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

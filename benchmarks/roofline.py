@@ -1,0 +1,46 @@
+"""§Roofline deliverable — the per-(arch x shape x mesh) three-term roofline
+table, generated from the dry-run artifacts in experiments/dryrun/."""
+import glob
+import json
+import os
+from collections import defaultdict
+
+from benchmarks._common import emit
+
+
+def load(tag="baseline", directory="experiments/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(f"{directory}/*__{tag}.json")):
+        d = json.load(open(f))
+        if "error" in d or "skipped" in d:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(tag="baseline"):
+    rows = []
+    cells = load(tag)
+    if not cells:
+        rows.append(emit("roofline/status", "no dry-run artifacts",
+                         "run: python -m repro.launch.dryrun --all"))
+        return rows
+    bottleneck_count = defaultdict(int)
+    for d in cells:
+        r = d["roofline"]
+        key = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        rows.append(emit(
+            f"roofline/{key}",
+            f"c={r['t_compute_s']:.3e}s|m={r['t_memory_s']:.3e}s|"
+            f"x={r['t_collective_s']:.3e}s",
+            f"bound={r['bottleneck']};useful={r['useful_flop_ratio']:.2f};"
+            f"frac={r['roofline_fraction']:.3f}"))
+        bottleneck_count[r["bottleneck"]] += 1
+    for k, v in sorted(bottleneck_count.items()):
+        rows.append(emit(f"roofline/bottleneck_census/{k}", v,
+                         f"of {len(cells)} cells"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

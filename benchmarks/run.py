@@ -1,0 +1,35 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,value,derived`` CSV plus per-module wall time."""
+import time
+
+
+def main() -> None:
+    from benchmarks import (batch_scaling, capacity_trap, dp_scaling,
+                            frontier, hybrid_sweep, kv_scaling,
+                            latency_decoupling, model_scaling,
+                            phase_divergence, roofline, tp_scaling)
+    modules = [
+        ("capacity_trap(Fig2)", capacity_trap),
+        ("latency_decoupling(Fig3)", latency_decoupling),
+        ("batch_scaling(Fig4-5)", batch_scaling),
+        ("dp_scaling(Fig6,8)", dp_scaling),
+        ("tp_scaling(Fig9)", tp_scaling),
+        ("hybrid_sweep(Fig7)", hybrid_sweep),
+        ("frontier(Fig10)", frontier),
+        ("model_scaling(Fig11)", model_scaling),
+        ("phase_divergence(Fig12-13)", phase_divergence),
+        ("kv_scaling(Fig14-15)", kv_scaling),
+        ("roofline(dry-run)", roofline),
+    ]
+    print("name,value,derived")
+    total0 = time.time()
+    for name, mod in modules:
+        t0 = time.time()
+        mod.run()
+        print(f"_timing/{name},{(time.time()-t0)*1e6:.0f},us_per_call",
+              flush=True)
+    print(f"_timing/total,{(time.time()-total0)*1e6:.0f},us_per_call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig 9 + Obs 5 — TP scaling (planner model): the 32B crossover where TP's
+capacity release beats its communication cost; 6.15x TP8-vs-TP1 target."""
+from repro.configs.paper_models import (DS_DISTILL_14B, DS_DISTILL_32B,
+                                        DS_DISTILL_8B)
+from repro.core import perf_model as pm, planner
+
+from benchmarks._common import emit
+
+
+def run():
+    rows = []
+    wl = planner.Workload()
+    for name, cfg in (("8b", DS_DISTILL_8B), ("14b", DS_DISTILL_14B),
+                      ("32b", DS_DISTILL_32B)):
+        base = None
+        for tp in (1, 2, 4, 8):
+            e = planner.estimate(cfg, pm.ParallelismPlan(dp=1, tp=tp),
+                                 pm.H200, wl)
+            base = base or e.completion_s
+            rows.append(emit(f"tp_scaling/{name}/completion_s/tp={tp}",
+                             round(e.completion_s, 1), "analytical;H200"))
+            rows.append(emit(f"tp_scaling/{name}/speedup/tp={tp}",
+                             round(base / e.completion_s, 2),
+                             "paper 32B: 6.15x at TP8"))
+            rows.append(emit(f"tp_scaling/{name}/kv_capacity_tokens/tp={tp}",
+                             e.kv_capacity_tokens, "capacity release"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

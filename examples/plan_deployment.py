@@ -1,0 +1,43 @@
+"""The paper's decision framework in action: rank parallelism plans for any
+assigned architecture on H200 nodes or v5e pod slices.
+
+    PYTHONPATH=src python examples/plan_deployment.py --arch kimi-k2-1t-a32b \
+        --hw v5e --devices 256
+"""
+import argparse
+
+from repro.configs.paper_models import PAPER_MODELS
+from repro.configs.registry import ALL_MODELS, get_config
+from repro.core import perf_model as pm, planner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-405b",
+                    choices=sorted(ALL_MODELS))
+    ap.add_argument("--hw", choices=["h200", "v5e"], default="v5e")
+    ap.add_argument("--devices", type=int, default=256)
+    ap.add_argument("--mean-osl", type=float, default=6800.0)
+    ap.add_argument("--fp8", action="store_true", help="fp8 weights")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    hw = {"h200": pm.H200, "v5e": pm.V5E}[args.hw]
+    wl = planner.Workload(mean_osl=args.mean_osl)
+    ests = planner.plan(cfg, hw, args.devices, wl,
+                        dtype_bytes=1 if args.fp8 else 2)
+    print(f"{args.arch} on {args.devices}x {hw.name} "
+          f"(mean OSL {args.mean_osl:.0f}):")
+    print(f"{'plan':>16s} {'est completion':>15s} {'decode tok/s':>13s} "
+          f"{'conc/replica':>13s} {'KV cap (tok)':>13s}")
+    for e in ests[:8]:
+        if e.feasible:
+            print(f"{e.label():>16s} {e.completion_s:>14.0f}s "
+                  f"{e.decode_tput_tok_s:>13.0f} {e.concurrency:>13d} "
+                  f"{e.kv_capacity_tokens:>13d}")
+        else:
+            print(f"{e.label():>16s}   INFEASIBLE ({e.reason})")
+
+
+if __name__ == "__main__":
+    main()

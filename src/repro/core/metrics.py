@@ -1,0 +1,74 @@
+"""Engine telemetry — the paper's §III-D metric set: TTFT, TPOT, generation
+throughput, E2E, request lifecycle decomposition, KV saturation, preemptions,
+plus modeled HBM-bandwidth utilisation in simulated mode."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+from repro.core.request import Request
+
+
+@dataclasses.dataclass
+class TimelinePoint:
+    t: float
+    running: int
+    waiting: int
+    kv_util: float
+    kv_frag: float
+    gen_tokens: int          # cumulative
+    prefill_tokens: int      # cumulative
+    preemptions: int         # cumulative
+    hbm_busy: float = 0.0    # modeled fraction (sim mode)
+
+
+class MetricsLog:
+    def __init__(self):
+        self.timeline: List[TimelinePoint] = []
+        self.finished: List[Request] = []
+        self.preemption_events: List[float] = []
+        self.throttle_events: List[float] = []
+
+    def snapshot(self, **kw):
+        self.timeline.append(TimelinePoint(**kw))
+
+    def finish(self, req: Request):
+        self.finished.append(req)
+
+    # ---- summaries ---------------------------------------------------------
+    @staticmethod
+    def _stats(vals: List[float]) -> Dict[str, float]:
+        vals = [v for v in vals if v is not None]
+        if not vals:
+            return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+        s = sorted(vals)
+        return {
+            "mean": statistics.fmean(s),
+            "p50": s[len(s) // 2],
+            "p95": s[min(int(len(s) * 0.95), len(s) - 1)],
+            "max": s[-1],
+        }
+
+    def summary(self, horizon: Optional[float] = None) -> Dict:
+        reqs = self.finished
+        gen_tokens = sum(r.generated for r in reqs)
+        t_end = max((r.t_finished or 0.0) for r in reqs) if reqs else 0.0
+        t_start = min(r.arrival for r in reqs) if reqs else 0.0
+        dur = horizon or max(t_end - t_start, 1e-9)
+        out = {
+            "n_finished": len(reqs),
+            "gen_tokens": gen_tokens,
+            "gen_throughput_tok_s": gen_tokens / dur,
+            "duration_s": dur,
+            "ttft_s": self._stats([r.ttft() for r in reqs]),
+            "tpot_s": self._stats([r.tpot() for r in reqs]),
+            "e2e_s": self._stats([r.e2e() for r in reqs]),
+            "waiting_s": self._stats([r.waiting_time() for r in reqs]),
+            "preemptions": sum(r.n_preemptions for r in reqs),
+            "recomputed_tokens": sum(r.recomputed_tokens for r in reqs),
+            "peak_kv_util": max((p.kv_util for p in self.timeline), default=0.0),
+            "mean_kv_util": statistics.fmean(
+                [p.kv_util for p in self.timeline]) if self.timeline else 0.0,
+        }
+        return out

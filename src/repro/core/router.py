@@ -1,0 +1,79 @@
+"""Memory-aware DP routing + straggler mitigation (paper Obs 3/4).
+
+"DP should be combined with admission control or memory-aware routing to
+prevent each replica from independently entering a preemption-heavy regime"
+and "tail latency is dominated by the replica that reaches KV saturation
+first" — the router scores replicas by predicted KV headroom (not just queue
+depth) and penalises stragglers via an EWMA of per-step latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    policy: str = "memory_aware"   # round_robin | jsq | memory_aware
+    straggler_penalty: float = 2.0
+    ewma_alpha: float = 0.2
+
+
+class DPRouter:
+    def __init__(self, replicas: List[InferenceEngine],
+                 cfg: Optional[RouterConfig] = None):
+        self.replicas = replicas
+        self.cfg = cfg or RouterConfig()
+        self._rr = 0
+        self._lat_ewma = [0.0] * len(replicas)
+        self._last_t = [0.0] * len(replicas)
+
+    def note_step(self, i: int, dt: float):
+        a = self.cfg.ewma_alpha
+        self._lat_ewma[i] = (1 - a) * self._lat_ewma[i] + a * dt
+
+    def pick(self, prompt_len: int, max_new: int) -> int:
+        c = self.cfg
+        if c.policy == "round_robin":
+            self._rr = (self._rr + 1) % len(self.replicas)
+            return self._rr
+        if c.policy == "jsq":
+            return min(range(len(self.replicas)),
+                       key=lambda i: len(self.replicas[i].sched.waiting)
+                       + len(self.replicas[i].sched.running))
+        # memory_aware: predicted pages after this request, plus straggler term
+        def score(i):
+            e = self.replicas[i]
+            est = e.sched.admission.estimator.predict
+            pred = sum(e.alloc.pages_for(
+                r.isl + int(est(r))) for r in e.sched.running)
+            pred += sum(e.alloc.pages_for(r.isl + int(est(r)))
+                        for r in e.sched.waiting)
+            pred += e.alloc.pages_for(prompt_len + max_new)
+            headroom = e.alloc.n_pages - pred
+            mean_lat = (sum(self._lat_ewma) / len(self._lat_ewma)) or 1e-9
+            straggle = self._lat_ewma[i] / mean_lat
+            return (-headroom, straggle * c.straggler_penalty)
+        return min(range(len(self.replicas)), key=score)
+
+    def submit(self, prompt, max_new: int, arrival: float = None) -> Request:
+        plen = prompt if isinstance(prompt, int) else len(prompt)
+        i = self.pick(plen, max_new)
+        return self.replicas[i].submit(prompt, max_new, arrival)
+
+    def run_all(self, max_steps: int = 10 ** 7):
+        """Co-simulate replicas on a shared virtual clock."""
+        active = True
+        steps = 0
+        while active and steps < max_steps:
+            active = False
+            for i, e in enumerate(self.replicas):
+                t0 = e.now
+                if e.step():
+                    active = True
+                    self.note_step(i, e.now - t0)
+            steps += 1
+        return [e.metrics for e in self.replicas]

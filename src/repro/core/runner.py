@@ -1,0 +1,171 @@
+"""Model runners behind the engine.
+
+``SimRunner``   — advances a virtual clock with the analytical perf model
+                  (frontier-scale studies; H200 constants reproduce the
+                  paper's figures, v5e constants drive TPU planning).
+``JaxRunner``   — real execution of a (small) model on this host: slot-based
+                  decode cache, whole-prompt prefill scattered into the slot,
+                  batched masked decode. The paged-accounting layer in the
+                  scheduler is identical in both modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import perf_model as pm
+from repro.core.request import Request
+
+
+class SimRunner:
+    """Virtual-clock runner: returns iteration latencies, emits dummy tokens."""
+
+    def __init__(self, cfg: ModelConfig, plan: pm.ParallelismPlan,
+                 hw: pm.Hardware, dtype_bytes: int = 2):
+        self.cfg = cfg
+        self.plan = plan
+        self.hw = hw
+        self.dtype_bytes = dtype_bytes
+
+    def iteration_time(self, prefill_tokens: int, decode_reqs: List[Request]
+                       ) -> Tuple[float, Dict[str, float]]:
+        cfg, plan, hw = self.cfg, self.plan, self.hw
+        parts = {"compute": 0.0, "memory": 0.0, "comm": 0.0}
+        t = 0.0
+        if prefill_tokens:
+            p = pm.prefill_step_time(cfg, prefill_tokens, plan, hw,
+                                     self.dtype_bytes)
+            t += p["total"]
+            for k in parts:
+                parts[k] += p[k]
+        if decode_reqs:
+            mean_ctx = float(np.mean([r.context_len for r in decode_reqs]))
+            d = pm.decode_step_time(cfg, len(decode_reqs), mean_ctx, plan, hw,
+                                    self.dtype_bytes)
+            bubble = pm.pp_bubble_factor(cfg, plan, hw, len(decode_reqs),
+                                         mean_ctx, self.dtype_bytes)
+            t += d["total"] * bubble \
+                + pm.pp_transport_time(cfg, len(decode_reqs), plan, hw,
+                                       self.dtype_bytes)
+            for k in parts:
+                parts[k] += d[k]
+        return t, parts
+
+    def prefill(self, req: Request, chunk: int) -> int:
+        return 0   # dummy token id
+
+    def decode(self, reqs: List[Request]) -> List[int]:
+        return [0] * len(reqs)
+
+    def release(self, req: Request):
+        pass
+
+    def hbm_busy_fraction(self, parts: Dict[str, float], t: float) -> float:
+        return min(parts["memory"] / t, 1.0) if t > 0 else 0.0
+
+
+class JaxRunner:
+    """Real execution with slot-based decode state (CPU-scale models)."""
+
+    def __init__(self, cfg: ModelConfig, params, ctx, max_slots: int,
+                 max_len: int, cache_dtype=None):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer as T
+        self.cfg, self.params, self.ctx = cfg, params, ctx
+        self.max_slots, self.max_len = max_slots, max_len
+        self._jnp = jnp
+        self._T = T
+        dt = cache_dtype or jnp.float32
+        self.state = T.init_decode_state(cfg, ctx, max_slots, max_len, dt)
+        self._free_slots = list(range(max_slots))[::-1]
+        self._slot_of: Dict[int, int] = {}
+        self._prefill_fn = jax.jit(
+            lambda p, tok: T.prefill(p, tok, cfg, ctx, max_len=max_len,
+                                     cache_dtype=dt))
+        self._decode_fn = jax.jit(
+            lambda p, st, tok, active: self._masked_decode(p, st, tok, active))
+
+    def _masked_decode(self, params, state, tokens, active):
+        logits, new_state = self._T.decode_step(params, state, tokens,
+                                                self.cfg, self.ctx)
+        # keep inactive slots untouched
+        merged = self._tree_select(new_state, state, active)
+        return logits, merged
+
+    def _bmask(self, active, arr):
+        jnp = self._jnp
+        # the slot axis is the unique axis whose size == max_slots (engine
+        # tests must pick max_slots distinct from structural dims)
+        matches = [ax for ax in range(arr.ndim)
+                   if arr.shape[ax] == self.max_slots]
+        if not matches:
+            return jnp.ones((), bool)
+        assert len(matches) == 1, \
+            f"ambiguous slot axis for shape {arr.shape}; pick another max_slots"
+        shape = [1] * arr.ndim
+        shape[matches[0]] = self.max_slots
+        return active.reshape(shape)
+
+    def _tree_select(self, new, old, active):
+        import jax
+        return jax.tree_util.tree_map(
+            lambda n, o: self._jnp.where(self._bmask(active, n), n, o)
+            if n.ndim else n, new, old)
+
+    # ------------------------------------------------------------------ api
+    def prefill(self, req: Request, chunk: int) -> int:
+        """Whole-prompt prefill into the request's slot; returns first token."""
+        import jax
+        jnp = self._jnp
+        if req.rid not in self._slot_of:
+            self._slot_of[req.rid] = self._free_slots.pop()
+        slot = self._slot_of[req.rid]
+        toks = req.prompt + req.output[:req.resume_extra]
+        tokens = jnp.asarray([toks], jnp.int32)
+        last, fresh = self._prefill_fn(self.params, tokens)
+        self.state = self._scatter_slot(self.state, fresh, slot)
+        return int(jnp.argmax(last[0]))
+
+    def _scatter_slot(self, state, fresh, slot):
+        import jax
+
+        def put(dst, src):
+            if dst.ndim == 0:
+                return dst
+            for ax in range(dst.ndim):
+                if dst.shape[ax] == self.max_slots and src.shape[ax] == 1:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    if ax + 1 < dst.ndim and dst.shape[ax + 1] != src.shape[ax + 1]:
+                        # seq axis shorter in fresh state: write the prefix
+                        idx[ax + 1] = slice(0, src.shape[ax + 1])
+                    return dst.at[tuple(idx)].set(src)
+            return dst
+        return jax.tree_util.tree_map(put, state, fresh)
+
+    def decode(self, reqs: List[Request]) -> List[int]:
+        jnp = self._jnp
+        slots = [self._slot_of[r.rid] for r in reqs]
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        active = np.zeros((self.max_slots,), bool)
+        for r, s in zip(reqs, slots):
+            last = r.output[-1] if r.output else (r.prompt[-1] if r.prompt else 0)
+            tokens[s, 0] = last
+            active[s] = True
+        logits, self.state = self._decode_fn(
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(active))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        return [int(nxt[s]) for s in slots]
+
+    def release(self, req: Request):
+        slot = self._slot_of.pop(req.rid, None)
+        if slot is not None:
+            self._free_slots.append(slot)
+
+    def iteration_time(self, prefill_tokens, decode_reqs):
+        return None, {}   # real mode: engine uses wall-clock

@@ -1,0 +1,158 @@
+"""Continuous-batching FCFS scheduler with chunked prefill and preemption
+(vLLM-v1 semantics, paper §II-C / §VI-C).
+
+Each engine step builds one iteration batch:
+  1. decode slots: one token for every RUNNING request past prefill;
+     growing a sequence across a page boundary may require a new page —
+     if the pool is exhausted, the *youngest* running request is preempted
+     (freed + requeued at the waiting-front for recompute), matching vLLM's
+     recompute-mode preemption.
+  2. chunked prefill: remaining token budget (max_num_batched_tokens) is
+     filled greedily from admitted requests' outstanding prompt chunks.
+  3. admission: WAITING requests enter while the AdmissionPolicy allows and
+     the concurrency cap (max_num_seqs, possibly autotuned) has room.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.admission import AdmissionPolicy
+from repro.core.kv_cache import PagedAllocator
+from repro.core.request import Request, State
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_num_seqs: int = 256
+    max_num_batched_tokens: int = 2048
+    chunk_size: int = 512
+
+
+@dataclasses.dataclass
+class StepPlan:
+    decode: List[Request]
+    prefill: List[Tuple[Request, int]]       # (request, chunk_len)
+    preempted: List[Request]
+    admitted: List[Request]
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(c for _, c in self.prefill)
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, alloc: PagedAllocator,
+                 admission: Optional[AdmissionPolicy] = None):
+        self.cfg = cfg
+        self.alloc = alloc
+        self.admission = admission or AdmissionPolicy()
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.n_preemptions = 0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, req: Request):
+        capacity = self.alloc.n_pages * self.alloc.page_size
+        if req.isl + req.max_new_tokens + 1 > capacity:
+            raise ValueError(
+                f"request {req.rid}: context {req.isl + req.max_new_tokens} "
+                f"exceeds KV pool capacity {capacity} tokens")
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def plan_step(self) -> StepPlan:
+        preempted: List[Request] = []
+        admitted: List[Request] = []
+
+        # 1) decode set — grow pages; preempt youngest on exhaustion.
+        # Strict FCFS order (arrival, rid): the oldest request is never a
+        # victim, guaranteeing forward progress (no preemption livelock).
+        decode: List[Request] = []
+        for req in list(sorted(self.running, key=lambda r: (r.arrival, r.rid))):
+            if not req.prefill_done:
+                continue
+            if req not in self.running:      # already preempted this step
+                continue
+            while not self.alloc.grow(req.rid, req.context_len + 1):
+                victim = self._pick_victim(exclude=req)
+                if victim is None:
+                    # nothing younger to evict: requeue req itself (possible
+                    # only transiently — submit() validates it fits alone)
+                    self._preempt(req, preempted)
+                    break
+                self._preempt(victim, preempted)
+            if req in self.running:
+                decode.append(req)
+
+        # 2) chunked prefill under the token budget
+        budget = self.cfg.max_num_batched_tokens - len(decode)
+        prefill: List[Tuple[Request, int]] = []
+        for req in self.running:
+            if req.prefill_done or budget <= 0 or req in preempted:
+                continue
+            chunk = min(self.cfg.chunk_size,
+                        req.prefill_target - req.prompt_pos, budget)
+            if chunk <= 0:
+                continue
+            if not self.alloc.grow(req.rid, req.prompt_pos + chunk):
+                continue                      # prefill throttled (no preempt)
+            prefill.append((req, chunk))
+            budget -= chunk
+
+        # 3) admission — backpressured: a step that preempted admits nothing
+        # (otherwise the resumed victim steals back the pages the preemptor
+        # just freed and the pair cycles forever — the thrash regime of Obs 1
+        # turned into a livelock)
+        while (not preempted and self.waiting
+               and len(self.running) < self.cfg.max_num_seqs
+               and budget > 0):
+            cand = self.waiting[0]
+            if not self.admission.admit(cand, self.running, self.alloc):
+                break
+            chunk = min(self.cfg.chunk_size, cand.prefill_target, budget)
+            if chunk <= 0 or not self.alloc.grow(cand.rid, chunk):
+                break
+            self.waiting.popleft()
+            cand.state = State.RUNNING
+            self.running.append(cand)
+            admitted.append(cand)
+            prefill.append((cand, chunk))
+            budget -= chunk
+
+        return StepPlan(decode=decode, prefill=prefill, preempted=preempted,
+                        admitted=admitted)
+
+    def finish(self, req: Request):
+        self.running.remove(req)
+        self.alloc.free(req.rid)
+        req.state = State.FINISHED
+        self.admission.estimator.observe(req.generated)
+
+    # ------------------------------------------------------------- internals
+    def _pick_victim(self, exclude: Request) -> Optional[Request]:
+        """vLLM recompute preemption: evict the most recently arrived running
+        request (minimises lost work under FCFS). Ties broken by rid so the
+        order is a strict total order."""
+        cands = [r for r in self.running if r is not exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.arrival, r.rid))
+
+    def _preempt(self, req: Request, out: List[Request]):
+        self.alloc.free(req.rid)
+        self.running.remove(req)
+        # recompute mode: the whole context (prompt + generated-so-far) must
+        # be prefill-recomputed on resume
+        req.recomputed_tokens += req.context_len
+        req.resume_extra = req.generated
+        req.prompt_pos = 0
+        req.state = State.PREEMPTED
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(req)          # resumes first (FCFS order)
+        out.append(req)

@@ -1,0 +1,36 @@
+"""jit'd public wrapper: dispatches the Pallas kernel on TPU, interpret mode on
+CPU (correctness), with shape padding to tile boundaries."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, lens=None, *, causal=True, window=0, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q (B,Sq,H,D); k,v (B,Skv,KV,D); lens (B,) optional valid kv lengths."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if lens is None:
+        lens = jnp.full((B,), Skv, jnp.int32)
+    if interpret is None:
+        interpret = not _on_tpu()
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = flash_attention_kernel(q, k, v, lens, causal=causal, window=window,
+                                 scale=scale, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return out[:, :Sq] if pad_q else out

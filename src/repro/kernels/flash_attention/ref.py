@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (materialises S x S scores;
+small shapes only — used by the kernel sweep tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, lens, *, causal=True, window=0, scale=None):
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)   # (B,Skv,H,D)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    valid = k_pos < lens.astype(jnp.int32)[:, None, None, None]
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window and window > 0:
+        valid = valid & (k_pos > q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = jnp.where(l > 0, p / jnp.maximum(l, 1e-30), 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)

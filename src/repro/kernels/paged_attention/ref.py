@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: gathers pages into a contiguous cache, dense attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lens, *, scale=None):
+    B, KV, G, D = q.shape
+    page = k_pages.shape[1]
+    max_blocks = block_tables.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    # gather (B, max_blocks*page, KV, D)
+    kc = k_pages[block_tables].reshape(B, max_blocks * page, KV, D)
+    vc = v_pages[block_tables].reshape(B, max_blocks * page, KV, D)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kc.astype(jnp.float32))
+    pos = jnp.arange(max_blocks * page)
+    valid = pos[None, :] <= lens.astype(jnp.int32)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = jnp.where(l > 0, p / jnp.maximum(l, 1e-30), 0.0)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vc.astype(jnp.float32))
+    return out.astype(q.dtype)

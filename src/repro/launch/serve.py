@@ -1,0 +1,108 @@
+"""Serving launcher.
+
+Real mode (CPU-runnable, reduced config):
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
+        --requests 8
+
+Simulated fleet mode (paper-scale characterization):
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-405b --sim \
+        --hw h200 --tp 8 --requests 2000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core import perf_model as pm
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.router import DPRouter, RouterConfig
+from repro.core.runner import JaxRunner, SimRunner
+from repro.data.reasoning import REASONING, sample
+
+
+def build_sim_fleet(cfg, args):
+    hw = {"h200": pm.H200, "v5e": pm.V5E}[args.hw]
+    plan = pm.ParallelismPlan(dp=args.dp, tp=args.tp, pp=args.pp, ep=args.tp)
+    cap = pm.kv_capacity_tokens(cfg, plan, hw)
+    ecfg = EngineConfig(n_pages=max(cap // 16, 64),
+                        max_num_seqs=args.max_num_seqs,
+                        max_num_batched_tokens=args.max_batched_tokens,
+                        chunk_size=512, admission_mode=args.admission,
+                        autotune=args.autotune)
+    replicas = [InferenceEngine(cfg, ecfg, SimRunner(cfg, plan, hw))
+                for _ in range(args.dp)]
+    return DPRouter(replicas, RouterConfig(policy=args.router))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sim", action="store_true")
+    ap.add_argument("--hw", choices=["h200", "v5e"], default="v5e")
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--max-num-seqs", type=int, default=256)
+    ap.add_argument("--max-batched-tokens", type=int, default=8192)
+    ap.add_argument("--admission", choices=["naive", "kv_aware"],
+                    default="kv_aware")
+    ap.add_argument("--router", choices=["round_robin", "jsq", "memory_aware"],
+                    default="memory_aware")
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.sim:
+        cfg = get_config(args.arch)
+        router = build_sim_fleet(cfg, args)
+        for isl, osl in sample(REASONING, args.requests, seed=args.seed):
+            router.submit(int(isl), int(osl), arrival=0.0)
+        metrics = router.run_all()
+        agg = {}
+        for i, m in enumerate(metrics):
+            s = m.summary()
+            print(f"[replica {i}] done={s['n_finished']} "
+                  f"tput={s['gen_throughput_tok_s']:.0f} tok/s "
+                  f"ttft_p50={s['ttft_s']['p50']:.2f}s "
+                  f"tpot={s['tpot_s']['mean']*1e3:.1f}ms "
+                  f"preempt={s['preemptions']}")
+        total = sum(m.summary()["gen_tokens"] for m in metrics)
+        dur = max(m.summary()["duration_s"] for m in metrics)
+        print(f"[fleet] {total} tokens in {dur:.1f}s "
+              f"-> {total/dur:.0f} tok/s aggregate")
+        return
+
+    # real execution
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+    from repro.parallel.sharding import single_device_ctx
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    ctx = single_device_ctx()
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed), ctx,
+                           mode="serve", dtype=jnp.float32)
+    max_len = 192
+    runner = JaxRunner(cfg, params, ctx, max_slots=8, max_len=max_len)
+    ecfg = EngineConfig(n_pages=8 * max_len // 16, max_num_seqs=8,
+                        max_num_batched_tokens=1024, chunk_size=max_len,
+                        admission_mode=args.admission)
+    eng = InferenceEngine(cfg, ecfg, runner, virtual_clock=False)
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24)))
+        eng.submit(prompt.tolist(), int(rng.integers(8, 32)))
+    m = eng.run()
+    s = m.summary()
+    print(json.dumps({k: v for k, v in s.items() if not isinstance(v, dict)},
+                     indent=1))
+    print(f"[serve] completed {s['n_finished']} requests, "
+          f"{s['gen_tokens']} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Shared numerics: RMSNorm, RoPE, initializers, losses."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq        # (..., S, half)
+    ang = ang[..., None, :]                                      # head axis slot
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rot = jnp.concatenate([out1, out2], axis=-1)
+    if d % 2:                                                    # odd head_dim tail
+        rot = jnp.concatenate([rot, x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis_size: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale / jnp.sqrt(jnp.asarray(in_axis_size, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None, z_loss: float = 1e-4):
+    """Cross-entropy with optional z-loss; logits (..., V) may be TP-sharded on V
+    (GSPMD turns the reductions into small all-reduces)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    # one-hot einsum keeps the vocab axis TP-sharded (GSPMD reduces with a
+    # small all-reduce instead of all-gathering logits)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = lse - label_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) blocks — chunked-scan training path + O(1)-state decode.
+
+Projections are stored unpacked (w_z/w_x/w_B/w_C/w_dt) so each piece can carry
+its own sharding (d_inner and heads on "model"; the B/C group projections are
+replicated — n_groups=1). The inter-chunk recurrence is a lax.scan carrying
+(B, nh, hd, ds) states; intra-chunk work is batched einsums, so per-step
+memory is O(B * chunk^2 * nh) rather than O(B * S^2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+
+def init_mamba_params(key, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    ds = s.d_state
+    ks = jax.random.split(key, 9)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_z": dense_init(ks[0], (d, di), d, dtype),
+        "w_x": dense_init(ks[1], (d, di), d, dtype),
+        "w_B": dense_init(ks[2], (d, ds), d, dtype),
+        "w_C": dense_init(ks[3], (d, ds), d, dtype),
+        "w_dt": dense_init(ks[4], (d, nh), d, dtype),
+        "conv_x": dense_init(ks[5], (s.conv_width, di), s.conv_width, dtype),
+        "conv_B": dense_init(ks[6], (s.conv_width, ds), s.conv_width, dtype),
+        "conv_C": dense_init(ks[7], (s.conv_width, ds), s.conv_width, dtype),
+        "A_log": jnp.zeros((nh,), dtype),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.full((nh,), -2.0, dtype),   # softplus(-2) ~ 0.13
+        "gnorm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[8], (di, d), di, dtype),
+    }
+
+
+MAMBA_AXES = {
+    "norm": ("embed",), "w_z": ("embed", "ssm_inner"), "w_x": ("embed", "ssm_inner"),
+    "w_B": ("embed", None), "w_C": ("embed", None), "w_dt": ("embed", "ssm_heads"),
+    "conv_x": (None, "ssm_inner"), "conv_B": (None, None), "conv_C": (None, None),
+    "A_log": ("ssm_heads",), "D": ("ssm_heads",), "dt_bias": ("ssm_heads",),
+    "gnorm": ("ssm_inner",), "out_proj": ("ssm_inner", "embed"),
+}
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x (B,S,C); w (cw,C); state (B,cw-1,C) or None.
+    Returns (out (B,S,C), new_state (B,cw-1,C))."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    return out, xp[:, -(cw - 1):, :] if cw > 1 else state
+
+
+def mamba2_forward(x, p, cfg, *, initial_state=None, conv_state=None):
+    """x (B,S,d) -> (y (B,S,d), (ssm_state, conv_states))."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.expand * d
+    nh = di // s.head_dim
+    hd, ds = s.head_dim, s.d_state
+    Q = min(s.chunk, S)
+    nchunks, rem = divmod(S, Q)
+
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    Bc = x @ p["w_B"]
+    Cc = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))          # (B,S,nh)
+    cs_x = conv_state[0] if conv_state is not None else None
+    cs_B = conv_state[1] if conv_state is not None else None
+    cs_C = conv_state[2] if conv_state is not None else None
+    xr, ns_x = _causal_conv(xr, p["conv_x"], cs_x)
+    Bc, ns_B = _causal_conv(Bc, p["conv_B"], cs_B)
+    Cc, ns_C = _causal_conv(Cc, p["conv_C"], cs_C)
+    xr, Bc, Cc = jax.nn.silu(xr), jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    xh = xr.reshape(B, S, nh, hd).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                      # (nh,)
+
+    h0 = initial_state if initial_state is not None \
+        else jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    def chunk_body(h, inp):
+        xq, dtq, Bq, Cq = inp                   # (B,Q,nh,hd),(B,Q,nh),(B,Q,ds)
+        q = xq.shape[1]
+        a = dtq * A                              # (B,q,nh) log-decay, <= 0
+        cum = jnp.cumsum(a, axis=1)
+        # intra-chunk (masked decayed scores, shared B/C group)
+        CB = jnp.einsum("bqn,bpn->bqp", Cq, Bq)                       # (B,q,q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])      # (B,q,q,nh)
+        tril = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(tril[None, :, :, None], decay, 0.0)
+        y_intra = jnp.einsum("bqp,bqph,bph,bphd->bqhd",
+                             CB, decay, dtq, xq)
+        # contribution of the carried state
+        y_state = jnp.einsum("bqn,bhdn->bqhd", Cq, h) * jnp.exp(cum)[..., None]
+        # next state
+        w_in = jnp.exp(cum[:, -1:, :] - cum) * dtq                    # (B,q,nh)
+        h_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * h \
+            + jnp.einsum("bqh,bqhd,bqn->bhdn", w_in, xq, Bq)
+        return h_new, y_intra + y_state
+
+    # full chunks via scan, remainder (S % Q) as one extra chunk_body call
+    def to_chunks(a):
+        return a[:, :nchunks * Q].reshape(B, nchunks, Q, *a.shape[2:]).swapaxes(0, 1)
+
+    if nchunks:
+        xs = tuple(map(to_chunks, (xh, dt, Bf, Cf)))
+        h_last, y_c = jax.lax.scan(chunk_body, h0, xs)
+        y = y_c.swapaxes(0, 1).reshape(B, nchunks * Q, nh, hd)
+    else:
+        h_last, y = h0, jnp.zeros((B, 0, nh, hd), jnp.float32)
+    if rem:
+        tail = tuple(a[:, nchunks * Q:] for a in (xh, dt, Bf, Cf))
+        h_last, y_tail = chunk_body(h_last, tail)
+        y = jnp.concatenate([y, y_tail], axis=1)
+    y = y.reshape(B, S, nh, hd)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    return y @ p["out_proj"], (h_last, (ns_x, ns_B, ns_C))
+
+
+def mamba2_decode(x, p, cfg, state):
+    """One-token step. x (B,1,d); state = (h (B,nh,hd,ds), conv_states)."""
+    s = cfg.ssm
+    B, _, d = x.shape
+    di = s.expand * d
+    nh = di // s.head_dim
+    hd, ds = s.head_dim, s.d_state
+    h, (cs_x, cs_B, cs_C) = state
+
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    Bc = x @ p["w_B"]
+    Cc = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]    # (B,nh)
+    xr, ns_x = _causal_conv(xr, p["conv_x"], cs_x)
+    Bc, ns_B = _causal_conv(Bc, p["conv_B"], cs_B)
+    Cc, ns_C = _causal_conv(Cc, p["conv_C"], cs_C)
+    xr, Bc, Cc = jax.nn.silu(xr), jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    xh = xr.reshape(B, nh, hd).astype(jnp.float32)
+    Bf = Bc[:, 0].astype(jnp.float32)                                 # (B,ds)
+    Cf = Cc[:, 0].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                           # (B,nh)
+    h_new = decay[:, :, None, None] * h \
+        + jnp.einsum("bh,bhd,bn->bhdn", dt, xh, Bf)
+    y = jnp.einsum("bn,bhdn->bhd", Cf, h_new)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    return y @ p["out_proj"], (h_new, (ns_x, ns_B, ns_C))
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    h = jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32)
+    cs = (jnp.zeros((batch, s.conv_width - 1, di), dtype),
+          jnp.zeros((batch, s.conv_width - 1, s.d_state), dtype),
+          jnp.zeros((batch, s.conv_width - 1, s.d_state), dtype))
+    return h, cs

@@ -1,0 +1,218 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, exp gating).
+
+Both are implemented as exact fp32 recurrences via lax.scan over time with the
+stabilizer state m (xLSTM paper eq. 15/24). The recurrent form is
+FLOP-equivalent to the chunked form for the matrix memory (O(hd^2) per token
+either way) so the roofline compute term is unaffected; a chunked kernel would
+only change latency on real hardware (noted in DESIGN.md — xlstm-350m is the
+smallest assigned arch and never the fleet bottleneck).
+
+State per sequence is O(1): mLSTM (C (nh,hd,hd), n (nh,hd), m (nh,)) and
+sLSTM (c,n,h,m each (d,)) — no KV cache, which is why long_500k runs here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+
+def _mlstm_dims(cfg):
+    di = 2 * cfg.d_model             # projection factor 2
+    nh = cfg.n_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+def init_mlstm_params(key, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    di, nh, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": dense_init(ks[0], (d, 2 * di), d, dtype),   # (x_m, ogate path)
+        "conv": dense_init(ks[1], (4, di), 4, dtype),
+        "w_q": dense_init(ks[2], (di, di), di, dtype),
+        "w_k": dense_init(ks[3], (di, di), di, dtype),
+        "w_v": dense_init(ks[4], (di, di), di, dtype),
+        "w_if": dense_init(ks[5], (di, 2 * nh), di, dtype),
+        "gnorm": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[6], (di, d), di, dtype),
+        "skip": dense_init(ks[7], (di, di), di, dtype, scale=0.1),
+    }
+
+
+MLSTM_AXES = {
+    "norm": ("embed",), "w_up": ("embed", "ssm_inner"), "conv": (None, "ssm_inner"),
+    "w_q": ("ssm_inner", None), "w_k": ("ssm_inner", None), "w_v": ("ssm_inner", None),
+    "w_if": ("ssm_inner", None), "gnorm": (None,), "w_down": (None, "embed"),
+    "skip": ("ssm_inner", None),
+}
+
+
+def init_slstm_params(key, cfg, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ff = int(round(4 * d / 3 / 64)) * 64
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_gates": dense_init(ks[0], (d, 4 * d), d, dtype),       # z,i,f,o
+        "r_gates": dense_init(ks[1], (4, nh, hd, hd), hd, dtype), # block-diag recurrent
+        "gnorm": jnp.ones((d,), dtype),
+        "w_up": dense_init(ks[2], (d, 2 * ff), d, dtype),
+        "w_down": dense_init(ks[3], (ff, d), ff, dtype),
+    }
+
+
+SLSTM_AXES = {
+    "norm": ("embed",), "w_gates": ("embed", None), "r_gates": (None, None, None, None),
+    "gnorm": (None,), "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed"),
+}
+
+
+def mlstm_forward(x, p, cfg, *, initial_state=None):
+    """x (B,S,d) -> (y (B,S,d), state). Recurrent scan over time."""
+    from repro.models.ssm import _causal_conv
+    B, S, d = x.shape
+    di, nh, hd = _mlstm_dims(cfg)
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, og = up[..., :di], up[..., di:]
+    if initial_state is not None:
+        conv_cs_in = initial_state[3]
+    else:
+        conv_cs_in = None
+    conv_out, conv_cs = _causal_conv(xm, p["conv"], conv_cs_in)
+    conv_act = jax.nn.silu(conv_out)
+    q = (conv_act @ p["w_q"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    k = ((conv_act @ p["w_k"]) * hd ** -0.5).reshape(B, S, nh, hd).astype(jnp.float32)
+    v = (xm @ p["w_v"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    gates = (xm @ p["w_if"]).astype(jnp.float32)                      # (B,S,2nh)
+    ig, fg = gates[..., :nh], gates[..., nh:]
+
+    if initial_state is None:
+        C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+        m0 = jnp.zeros((B, nh), jnp.float32)
+    else:
+        C0, n0, m0 = initial_state[:3]
+
+    def step(carry, inp):
+        C, n, m, = carry
+        qt, kt, vt, it, ft = inp
+        logf = jax.nn.log_sigmoid(ft)                                 # <= 0
+        m_new = jnp.maximum(logf + m, it)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (vt[..., :, None] * kt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (q, k, v, ig, fg))
+    (Cf, nf, mf), h = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = jnp.swapaxes(h, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(h, p["gnorm"], cfg.norm_eps) + conv_act @ p["skip"]
+    y = (h * jax.nn.sigmoid(og)) @ p["w_down"]
+    return x + y, (Cf, nf, mf, conv_cs)
+
+
+def mlstm_decode(x, p, cfg, state):
+    """x (B,1,d); state (C, n, m, conv_state (B,3,di))."""
+    from repro.models.ssm import _causal_conv
+    B = x.shape[0]
+    di, nh, hd = _mlstm_dims(cfg)
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, og = up[..., :di], up[..., di:]
+    conv_out, new_cs = _causal_conv(xm, p["conv"], state[3])
+    conv_act = jax.nn.silu(conv_out)
+    q = (conv_act @ p["w_q"]).reshape(B, nh, hd).astype(jnp.float32)
+    k = ((conv_act @ p["w_k"]) * hd ** -0.5).reshape(B, nh, hd).astype(jnp.float32)
+    v = (xm @ p["w_v"]).reshape(B, nh, hd).astype(jnp.float32)
+    gates = (xm @ p["w_if"]).astype(jnp.float32)[:, 0]
+    it, ft = gates[..., :nh], gates[..., nh:]
+    C, n, m = state[:3]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(it - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(B, 1, di).astype(x.dtype)
+    h = rmsnorm(h, p["gnorm"], cfg.norm_eps) + conv_act @ p["skip"]
+    y = (h * jax.nn.sigmoid(og)) @ p["w_down"]
+    return x + y, (C, n, m, new_cs)
+
+
+def slstm_forward(x, p, cfg, *, initial_state=None):
+    """x (B,S,d) -> (y, state). Fully sequential exp-gated sLSTM."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    wx = (xn @ p["w_gates"]).astype(jnp.float32)                      # (B,S,4d)
+
+    if initial_state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, h0, m0 = initial_state
+    R = p["r_gates"].astype(jnp.float32)                              # (4,nh,hd,hd)
+
+    def step(carry, wxt):
+        c, n, h, m = carry
+        hh = h.reshape(B, nh, hd)
+        rec = jnp.einsum("ghij,bhj->gbhi", R, hh).reshape(4, B, d)
+        zt = jnp.tanh(wxt[..., :d] + rec[0])
+        it = wxt[..., d:2 * d] + rec[1]
+        ft = wxt[..., 2 * d:3 * d] + rec[2]
+        ot = jax.nn.sigmoid(wxt[..., 3 * d:] + rec[3])
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (cf, nf, hf, mf), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                        jnp.swapaxes(wx, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)
+    h = rmsnorm(h, p["gnorm"], cfg.norm_eps)
+    ff = p["w_down"].shape[0]
+    up = h @ p["w_up"]
+    y = (jax.nn.gelu(up[..., :ff]) * up[..., ff:]) @ p["w_down"]
+    return x + y, (cf, nf, hf, mf)
+
+
+def slstm_decode(x, p, cfg, state):
+    y, new_state = slstm_forward(x, p, cfg, initial_state=state)
+    return y, new_state
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    di, nh, hd = _mlstm_dims(cfg)
+    return (jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            jnp.zeros((batch, nh, hd), jnp.float32),
+            jnp.zeros((batch, nh), jnp.float32),
+            jnp.zeros((batch, 3, di), dtype))
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32), jnp.ones((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32), jnp.zeros((batch, d), jnp.float32))

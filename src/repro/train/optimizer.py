@@ -1,0 +1,102 @@
+"""ZeRO-sharded AdamW (no optax dependency).
+
+Moment tensors reuse the parameter shardings, so sharding params FSDP-style
+(DESIGN.md §5) automatically gives ZeRO-1/3 semantics under GSPMD: each device
+stores only its shard of m/v and the update is computed shard-locally after
+the gradient reduce-scatter GSPMD inserts.
+
+``state_dtype`` is a §Perf lever: fp32 (default, faithful to standard
+practice) or bf16 (halves optimizer HBM — how llama3-405b train_4k fits a
+single v5e pod, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    state_dtype: Any = jnp.float32
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params, cfg: AdamWConfig):
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.state_dtype)
+    return {
+        "m": jax.tree_util.tree_map(zeros, abstract_params),
+        "v": jax.tree_util.tree_map(zeros, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_state_shardings(param_shardings, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, grads, opt_state, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

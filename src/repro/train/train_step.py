@@ -1,0 +1,40 @@
+"""The jit-able training step (and the serve steps the dry-run lowers)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, apply_updates
+
+
+def make_train_step(cfg, ctx, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, batch, cfg, ctx))(params)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg, ctx, max_len=None, cache_dtype=jnp.bfloat16):
+    def prefill_step(params, tokens, prefix_embeds=None):
+        last, state = T.prefill(params, tokens, cfg, ctx,
+                                prefix_embeds=prefix_embeds, max_len=max_len,
+                                cache_dtype=cache_dtype)
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_tok, state
+    return prefill_step
+
+
+def make_decode_step(cfg, ctx):
+    def serve_step(params, state, tokens):
+        logits, state = T.decode_step(params, state, tokens, cfg, ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, state
+    return serve_step

@@ -1,0 +1,69 @@
+"""HLO cost-analyzer validation: trip-count multiplication, collective
+detection inside scan bodies, dtype-policy byte counting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo import analyze, parse_hlo, shape_bytes
+
+
+def test_shape_bytes_policy():
+    # float buffers count at the bf16 storage policy (2B); ints at native
+    assert shape_bytes("f32[128,128]{1,0}") == 128 * 128 * 2
+    assert shape_bytes("bf16[64]") == 128
+    assert shape_bytes("s32[10]") == 40
+    assert shape_bytes("(f32[4,4], s32[2])") == 32 + 8
+    assert shape_bytes("f32[128]", float_bytes=4) == 512
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c.sum()
+
+    L, N, D = 6, 16, 64
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((N, D), jnp.float32)).compile()
+    res = analyze(comp.as_text(), 1).summary()
+    expected = L * 2 * N * D * D
+    assert abs(res["flops"] - expected) / expected < 0.01
+
+
+def test_nested_scan_flops():
+    def f(w, x):
+        def outer(c, wg):
+            def inner(ci, wl):
+                return ci @ wl, None
+            c, _ = jax.lax.scan(inner, c, wg)
+            return c, None
+        c, _ = jax.lax.scan(outer, x, w)
+        return c.sum()
+
+    G, P, D, N = 3, 4, 32, 8
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((G, P, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((N, D), jnp.float32)).compile()
+    res = analyze(comp.as_text(), 1).summary()
+    expected = G * P * 2 * N * D * D
+    assert abs(res["flops"] - expected) / expected < 0.01
+
+
+def test_parse_hlo_handles_tuples_and_nested_headers():
+    txt = """
+HloModule m
+%body.1 (arg: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  ROOT %t = (s32[], f32[4,4]) tuple(%a, %b)
+}
+ENTRY %main.2 (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4] parameter(0)
+  ROOT %d = f32[4,4] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps = parse_hlo(txt)
+    assert "body.1" in comps and "main.2" in comps
+    res = analyze(txt, 1)
+    assert res.flops == 2 * 4 * 4 * 4

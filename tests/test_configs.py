@@ -1,0 +1,59 @@
+"""Config arithmetic vs published numbers (incl. the paper's own KV table)."""
+import pytest
+
+from repro.configs.paper_models import (DEEPSEEK_R1_671B, DS_DISTILL_32B,
+                                        DS_DISTILL_70B, DS_DISTILL_8B)
+from repro.configs.registry import (ALL_MODELS, ARCHS, SHAPES, cells,
+                                    get_config, get_smoke_config)
+
+
+def test_all_archs_present():
+    assert len(ARCHS) == 10
+    assert len(SHAPES) == 4
+
+
+def test_cell_grid():
+    allc = list(cells(include_skipped=True))
+    assert len(allc) == 40
+    runnable = [c for c in allc if c[2] is None]
+    assert len(runnable) == 33          # 7 long_500k skips (full-attention)
+    skipped = {(a, s) for a, s, r in allc if r}
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("h2o-danube-3-4b", "long_500k") not in skipped     # SWA runs
+    assert ("zamba2-2.7b", "long_500k") not in skipped
+    assert ("xlstm-350m", "long_500k") not in skipped
+
+
+def test_paper_kv_per_token():
+    # §III-C: 32B ≈ 262 KB/token, 70B ≈ 328 KB/token (FP16)
+    assert DS_DISTILL_32B.kv_bytes_per_token(2) == 262144
+    assert DS_DISTILL_70B.kv_bytes_per_token(2) == 327680
+    # MLA compresses R1's cache to (kv_rank + rope) per layer
+    assert DEEPSEEK_R1_671B.kv_bytes_per_token(2) == (512 + 64) * 61 * 2
+
+
+def test_param_counts():
+    assert abs(DS_DISTILL_8B.param_count() / 1e9 - 8.0) < 0.2
+    assert abs(get_config("llama3-405b").param_count() / 1e9 - 405.9) < 3
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert abs(phi.param_count() / 1e9 - 42) < 1
+    assert abs(phi.active_param_count() / 1e9 - 6.6) < 0.3
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.param_count() / 1e9 > 1000
+    assert abs(kimi.active_param_count() / 1e9 - 33.7) < 2
+
+
+def test_state_bytes_attention_free():
+    x = get_config("xlstm-350m")
+    assert x.kv_bytes_per_token() == 0
+    assert x.state_bytes_per_seq() > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_configs_reduce(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 128 and cfg.vocab <= 512
+    full = get_config(arch)
+    assert cfg.family == full.family
+    assert (cfg.moe is None) == (full.moe is None)
+    assert (cfg.ssm is None) == (full.ssm is None)

@@ -1,0 +1,22 @@
+"""Workload generator matches the paper's published Fig-1 statistics."""
+from repro.data.reasoning import CHAT, REASONING, profile, sample
+
+
+def test_reasoning_profile_matches_paper():
+    p = profile(REASONING, n=50_000, seed=0)
+    # paper §III-B: 77% of prompts 50-150 tokens; few exceed 300;
+    # 45% of responses exceed 5000 tokens
+    assert 0.70 < p["isl_50_150"] < 0.84
+    assert p["isl_gt_300"] < 0.05
+    assert 0.38 < p["osl_gt_5000"] < 0.52
+
+
+def test_chat_profile_is_short():
+    p = profile(CHAT, n=20_000, seed=0)
+    assert p["osl_gt_5000"] < 0.02
+    assert p["mean_osl"] < 800
+
+
+def test_sample_deterministic():
+    assert sample(REASONING, 100, seed=3) == sample(REASONING, 100, seed=3)
+    assert sample(REASONING, 100, seed=3) != sample(REASONING, 100, seed=4)

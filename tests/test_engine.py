@@ -1,0 +1,138 @@
+"""End-to-end engine behaviour: real-execution correctness (engine output ==
+straight-line greedy decode, WITH and WITHOUT forced preemption), sim-mode
+capacity-trap dynamics, autotuner, and DP routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core import perf_model as pm
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.router import DPRouter, RouterConfig
+from repro.core.runner import JaxRunner, SimRunner
+from repro.models import transformer as T
+from repro.parallel.sharding import single_device_ctx
+
+CTX = single_device_ctx()
+
+
+def _greedy_reference(cfg, params, prompt, n_new):
+    tokens = jnp.asarray([prompt], jnp.int32)
+    last, state = T.prefill(params, tokens, cfg, CTX, max_len=192,
+                            cache_dtype=jnp.float32)
+    out = [int(jnp.argmax(last[0]))]
+    for _ in range(n_new - 1):
+        logits, state = T.decode_step(
+            params, state, jnp.asarray([[out[-1]]], jnp.int32), cfg, CTX)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("llama3.2-3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), CTX, mode="serve",
+                           dtype=jnp.float32)
+    return cfg, params
+
+
+def _run_engine(cfg, params, prompts, n_new, n_pages):
+    runner = JaxRunner(cfg, params, CTX, max_slots=4, max_len=192)
+    ecfg = EngineConfig(n_pages=n_pages, max_num_seqs=4,
+                        max_num_batched_tokens=512, chunk_size=192,
+                        admission_mode="naive")
+    eng = InferenceEngine(cfg, ecfg, runner, virtual_clock=False)
+    reqs = [eng.submit(p, n) for p, n in zip(prompts, n_new)]
+    eng.run(max_steps=2000)
+    return reqs
+
+
+def test_engine_matches_greedy(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n).tolist()
+               for n in (7, 11, 5)]
+    n_new = [6, 4, 8]
+    reqs = _run_engine(cfg, params, prompts, n_new, n_pages=64)
+    for p, n, r in zip(prompts, n_new, reqs):
+        assert r.output == _greedy_reference(cfg, params, p, n)
+
+
+def test_engine_preemption_preserves_outputs(small_model):
+    """With a pool sized to force preemption+recompute, outputs must still be
+    exactly the unconstrained greedy continuation (§IV-A recompute path)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=30).tolist() for _ in range(3)]
+    n_new = [20, 20, 20]
+    reqs = _run_engine(cfg, params, prompts, n_new, n_pages=7)
+    assert sum(r.n_preemptions for r in reqs) > 0, \
+        "pool was sized to force preemption"
+    for p, n, r in zip(prompts, n_new, reqs):
+        assert r.output == _greedy_reference(cfg, params, p, n)
+
+
+def _sim_engine(cfg, max_seqs, n_pages, admission="naive", autotune=False):
+    ecfg = EngineConfig(n_pages=n_pages, max_num_seqs=max_seqs,
+                        max_num_batched_tokens=4096, chunk_size=256,
+                        admission_mode=admission, autotune=autotune)
+    return InferenceEngine(
+        cfg, ecfg, SimRunner(cfg, pm.ParallelismPlan(), pm.H200))
+
+
+def test_sim_capacity_trap_dynamics():
+    """Obs 1/2: TTFT falls and TPOT rises with concurrency; oversubscription
+    triggers preemption."""
+    from repro.configs.paper_models import DS_DISTILL_8B
+    cfg = DS_DISTILL_8B
+    res = {}
+    for ms in (16, 256):
+        eng = _sim_engine(cfg, ms, n_pages=3000)
+        for _ in range(120):
+            eng.submit(100, 600, arrival=0.0)
+        s = eng.run(max_steps=50000).summary()
+        res[ms] = s
+    assert res[256]["ttft_s"]["p50"] < res[16]["ttft_s"]["p50"]
+    assert res[256]["tpot_s"]["mean"] > res[16]["tpot_s"]["mean"]
+    assert res[256]["preemptions"] > 0
+    assert res[16]["preemptions"] == 0
+
+
+def test_kv_aware_admission_prevents_preemption_in_sim():
+    from repro.configs.paper_models import DS_DISTILL_8B
+    cfg = DS_DISTILL_8B
+    naive = _sim_engine(cfg, 256, 3000, admission="naive")
+    aware = _sim_engine(cfg, 256, 3000, admission="kv_aware")
+    for eng in (naive, aware):
+        for _ in range(120):
+            eng.submit(100, 600, arrival=0.0)
+    sn = naive.run(max_steps=50000).summary()
+    sa = aware.run(max_steps=50000).summary()
+    assert sn["preemptions"] > 0
+    assert sa["preemptions"] == 0
+    assert sa["recomputed_tokens"] == 0
+
+
+def test_autotuner_backs_off():
+    from repro.configs.paper_models import DS_DISTILL_8B
+    cfg = DS_DISTILL_8B
+    eng = _sim_engine(cfg, 512, 2000, admission="naive", autotune=True)
+    for _ in range(200):
+        eng.submit(100, 500, arrival=0.0)
+    eng.run(max_steps=50000)
+    assert eng.sched.cfg.max_num_seqs < 512, "autotuner should shed concurrency"
+
+
+def test_memory_aware_router_balances():
+    from repro.configs.paper_models import DS_DISTILL_8B
+    cfg = DS_DISTILL_8B
+    replicas = [_sim_engine(cfg, 64, 2000) for _ in range(4)]
+    router = DPRouter(replicas, RouterConfig(policy="memory_aware"))
+    for i in range(160):
+        router.submit(100, 400, arrival=0.0)
+    counts = [len(e.sched.waiting) + len(e.sched.running) for e in replicas]
+    assert max(counts) - min(counts) <= 2, f"imbalanced routing: {counts}"
+    router.run_all()
+    done = sum(e.metrics.summary()["n_finished"] for e in replicas)
+    assert done == 160

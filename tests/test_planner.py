@@ -1,0 +1,86 @@
+"""Planner regression against the paper's measured orderings (§IV-§VI).
+
+Absolute seconds differ from the paper (different request caps / engine
+versions); the *orderings* — the paper's actual contribution — must hold.
+"""
+import pytest
+
+from repro.configs.paper_models import (DEEPSEEK_R1_671B, DS_DISTILL_14B,
+                                        DS_DISTILL_32B, DS_DISTILL_8B)
+from repro.configs.registry import get_config
+from repro.core import perf_model as pm, planner
+
+
+def _by_label(cfg, dtype_bytes=2):
+    ests = planner.plan(cfg, pm.H200, 8, dtype_bytes=dtype_bytes)
+    return {e.label(): e for e in ests}, ests
+
+
+def test_small_models_prefer_dp():
+    """Obs 5: 8B is DP-dominant; TP8 and every PP plan lose."""
+    lab, ests = _by_label(DS_DISTILL_8B)
+    best = ests[0]
+    assert best.plan.dp >= 4 and best.plan.pp == 1
+    assert lab["DP=8"].completion_s < lab["TP=8"].completion_s
+    assert lab["DP=8"].completion_s < lab["PP=8"].completion_s
+    # paper Fig 7: PP-heavy hybrids are ~3.5x off for small models
+    assert lab["TP=4+PP=2"].completion_s > 2.0 * lab["DP=8"].completion_s
+
+
+def test_14b_dp_beats_tp8():
+    lab, ests = _by_label(DS_DISTILL_14B)
+    assert ests[0].plan.dp >= 4 and ests[0].plan.pp == 1
+    assert lab["DP=8"].completion_s < lab["TP=8"].completion_s
+    # DP=8 within the top band (paper: best measured config)
+    assert lab["DP=8"].completion_s < 1.2 * ests[0].completion_s
+
+
+def test_32b_crossover_right_sized_tp():
+    """§V-B: DP4xTP2 beats pure TP8 beats pure DP8."""
+    lab, _ = _by_label(DS_DISTILL_32B)
+    assert lab["DP=4+TP=2"].completion_s < lab["TP=8"].completion_s
+    assert lab["TP=8"].completion_s < lab["DP=8"].completion_s
+    # TP capacity release (Obs 5): TP=8 frees ~16x the per-replica KV room
+    assert lab["TP=8"].kv_capacity_tokens > 8 * lab["DP=8"].kv_capacity_tokens
+
+
+def test_405b_dense_frontier():
+    """§V-C: DP infeasible; TP8 best; PP8 catastrophic (>=5x)."""
+    lab, ests = _by_label(get_config("llama3-405b"))
+    assert not lab["DP=8"].feasible
+    assert ests[0].label() == "TP=8"
+    assert lab["PP=8"].completion_s > 5.0 * lab["TP=8"].completion_s
+
+
+def test_r1_sparse_prefers_hybrid_pp():
+    """Obs 6: the MoE+MLA frontier model prefers hybrid PP over TP8."""
+    lab, ests = _by_label(DEEPSEEK_R1_671B, dtype_bytes=1)   # fp8 weights
+    best = ests[0]
+    assert best.plan.pp > 1 and best.plan.tp <= 4
+    hybrid = min(lab["TP=2+PP=4"].completion_s, lab["TP=4+PP=2"].completion_s)
+    assert hybrid < lab["TP=8"].completion_s
+
+
+def test_tp_transition_with_scale():
+    """Fig 8/9: TP speedup over TP1 grows with model size (sublinear)."""
+    wl = planner.Workload()
+    sp = {}
+    for name, cfg in (("8b", DS_DISTILL_8B), ("32b", DS_DISTILL_32B)):
+        t1 = planner.estimate(cfg, pm.ParallelismPlan(dp=1, tp=1), pm.H200, wl)
+        t8 = planner.estimate(cfg, pm.ParallelismPlan(dp=1, tp=8), pm.H200, wl)
+        sp[name] = t1.completion_s / t8.completion_s
+    assert sp["32b"] > sp["8b"]
+    # paper: 6.15x; slight super-linearity vs TP1 is legitimate (TP=8 also
+    # eliminates the preemption regime TP1 sits in, §V-A)
+    assert 2.0 < sp["32b"] < 12.0
+
+
+def test_v5e_plans_exist_for_all_archs():
+    """The planner must produce a feasible plan for every assigned arch on a
+    v5e pod slice (operational guidance deliverable)."""
+    from repro.configs.registry import ARCHS
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        best = planner.best(cfg, pm.V5E, 256)
+        assert best.feasible, f"{arch}: no feasible v5e plan"
+        assert best.plan.devices == 256

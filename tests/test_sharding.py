@@ -1,0 +1,55 @@
+"""Head-padding and sharding-rule properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import ARCHS, get_config
+from repro.parallel.sharding import (ParallelContext, kv_to_orig,
+                                     padded_heads, q_to_orig)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 160), st.integers(0, 6), st.sampled_from([1, 2, 4, 8, 16]))
+def test_padded_heads_properties(h, kv_div_pow, tp):
+    # kv heads divide q heads (GQA invariant); kv == h is MHA
+    divs = [d for d in range(1, h + 1) if h % d == 0]
+    kv = divs[min(kv_div_pow, len(divs) - 1)]
+    hp, kvp = padded_heads(h, kv, tp)
+    assert hp >= h and kvp >= min(kv, hp)
+    assert hp % tp == 0 and kvp % tp == 0
+    assert hp % kvp == 0                       # integral group size
+    if kv < h:
+        assert kvp % kv == 0                   # exact replica tiling
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_padded_heads_for_assigned_archs_tp16(arch):
+    cfg = get_config(arch)
+    hp, kvp = padded_heads(cfg.n_heads, cfg.n_kv_heads, 16)
+    assert hp % 16 == 0 and kvp % 16 == 0 and hp % kvp == 0
+    qmap = q_to_orig(hp, kvp, cfg.n_heads, cfg.n_kv_heads)
+    kvmap = kv_to_orig(kvp, cfg.n_heads, cfg.n_kv_heads)
+    # every original q head appears exactly once
+    used = qmap[qmap >= 0]
+    assert sorted(used.tolist()) == list(range(cfg.n_heads))
+    # padded q slot group must attend a replica of its original kv head
+    g = hp // kvp
+    for slot, orig_q in enumerate(qmap):
+        if orig_q < 0:
+            continue
+        kv_slot = slot // g
+        orig_kv = kvmap[kv_slot]
+        if cfg.n_kv_heads < cfg.n_heads:
+            expected = orig_q // (cfg.n_heads // cfg.n_kv_heads)
+            assert orig_kv == expected, (arch, slot)
+        else:
+            assert orig_kv == orig_q
+
+
+def test_rules_override_and_specs():
+    ctx = ParallelContext(mesh=None, rules_override={"cache_seq": "data"})
+    spec = ctx.spec("layers", "cache_batch", "cache_seq", "cache_kv", None)
+    assert spec[2] == "data"
+    assert spec[3] == "model"
+    ctx2 = ParallelContext(mesh=None, fsdp_axis=None)
+    assert ctx2.spec("embed")[0] is None       # FSDP disabled
