@@ -4,8 +4,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (batch_scaling, capacity_trap, dp_scaling,
-                            frontier, hybrid_sweep, kv_scaling,
+    from benchmarks import (batch_scaling, capacity_trap, disagg_sweep,
+                            dp_scaling, frontier, hybrid_sweep, kv_scaling,
                             latency_decoupling, model_scaling,
                             phase_divergence, roofline, tp_scaling)
     modules = [
@@ -19,6 +19,7 @@ def main() -> None:
         ("model_scaling(Fig11)", model_scaling),
         ("phase_divergence(Fig12-13)", phase_divergence),
         ("kv_scaling(Fig14-15)", kv_scaling),
+        ("disagg_sweep(cluster)", disagg_sweep),
         ("roofline(dry-run)", roofline),
     ]
     print("name,value,derived")

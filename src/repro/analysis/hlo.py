@@ -220,10 +220,16 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     for d in rdims:
         out *= d
     m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
-    lhs_name = re.match(r"\s*%?([\w\.\-]+)", op.rest)
+    # newer XLA prints inline operand types ("dot(f32[16,64] %lhs, ...)"),
+    # so take the first %-prefixed operand rather than the first token
+    operands = _operand_names(op)
     contract = 1
-    if m and lhs_name:
-        lt = comp.symtab.get(lhs_name.group(1), "")
+    if m and operands:
+        lt = comp.symtab.get(operands[0], "")
+        if not lt:
+            tm = re.match(r"\s*(\([^)]*\)|[\w\[\]{},]+)\s+%" +
+                          re.escape(operands[0]), op.rest)
+            lt = tm.group(1) if tm else ""
         _, ldims = _shape_dims(lt)
         for idx in (int(i) for i in m.group(1).split(",") if i):
             if idx < len(ldims):

@@ -1,0 +1,23 @@
+"""Cluster serving layer: open-loop arrival replay, disaggregated
+prefill/decode pools, pluggable routing, and SLO-goodput accounting."""
+from repro.cluster.arrivals import (ArrivalProcess, GammaProcess,
+                                    PoissonProcess, TraceEntry, TraceProcess,
+                                    load_trace, make_trace, save_trace)
+from repro.cluster.metrics import ClusterMetrics, MigrationRecord
+from repro.cluster.policies import (DispatchPolicy, JoinShortestQueue,
+                                    LeastKVHeadroom, MemoryAware,
+                                    MostKVHeadroom, RoundRobin, RoutingPolicy,
+                                    make_dispatcher, make_policy)
+from repro.cluster.runtime import ClusterConfig, ClusterRuntime
+from repro.cluster.worker import Worker, make_sim_worker
+
+__all__ = [
+    "ArrivalProcess", "PoissonProcess", "GammaProcess", "TraceProcess",
+    "TraceEntry", "make_trace", "save_trace", "load_trace",
+    "ClusterMetrics", "MigrationRecord",
+    "RoutingPolicy", "RoundRobin", "JoinShortestQueue", "MemoryAware",
+    "DispatchPolicy", "LeastKVHeadroom", "MostKVHeadroom",
+    "make_policy", "make_dispatcher",
+    "ClusterConfig", "ClusterRuntime",
+    "Worker", "make_sim_worker",
+]

@@ -1,0 +1,103 @@
+"""Open-loop arrival processes and workload traces (paper §III-B).
+
+Closed-loop, all-at-once submission (every benchmark before the cluster layer)
+hides the serving-level dynamics the paper measures: queueing delay, the
+first-saturating replica, and the goodput cliff under rising load. The
+cluster runtime instead replays an *open-loop* trace — requests arrive on a
+stochastic process regardless of completion — which is what "heavy traffic
+from millions of users" looks like to a fleet.
+
+``PoissonProcess``  — memoryless arrivals at `rate` req/s (M/G/k baseline).
+``GammaProcess``    — gamma inter-arrivals with a coefficient of variation:
+                      cv > 1 models bursty traffic, cv < 1 smoothed traffic.
+``TraceProcess``    — explicit arrival times (replay a recorded trace).
+
+``make_trace`` glues a process to the Natural-Reasoning (ISL, OSL) sampler in
+``repro.data.reasoning`` producing ``TraceEntry`` rows the runtime replays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.reasoning import WorkloadSpec, sample
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    arrival: float
+    isl: int
+    osl: int
+
+
+class ArrivalProcess:
+    """Yields n monotone non-decreasing arrival times starting at t0."""
+
+    def times(self, n: int, seed: int = 0, t0: float = 0.0) -> List[float]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonProcess(ArrivalProcess):
+    rate: float                       # mean arrivals per second
+
+    def times(self, n: int, seed: int = 0, t0: float = 0.0) -> List[float]:
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / self.rate, size=n)
+        return (t0 + np.cumsum(gaps)).tolist()
+
+
+@dataclasses.dataclass(frozen=True)
+class GammaProcess(ArrivalProcess):
+    """Gamma inter-arrival renewal process: cv=1 is Poisson; cv>1 bursty."""
+    rate: float
+    cv: float = 2.0                   # coefficient of variation of the gaps
+
+    def times(self, n: int, seed: int = 0, t0: float = 0.0) -> List[float]:
+        rng = np.random.default_rng(seed)
+        shape = 1.0 / (self.cv ** 2)
+        scale = 1.0 / (self.rate * shape)
+        gaps = rng.gamma(shape, scale, size=n)
+        return (t0 + np.cumsum(gaps)).tolist()
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceProcess(ArrivalProcess):
+    arrivals: Sequence[float]
+
+    def times(self, n: int, seed: int = 0, t0: float = 0.0) -> List[float]:
+        ts = sorted(self.arrivals)[:n]
+        if len(ts) < n:
+            raise ValueError(f"trace has {len(ts)} arrivals, need {n}")
+        return [t0 + t for t in ts]
+
+
+def make_trace(process: ArrivalProcess, spec: WorkloadSpec, n: int,
+               seed: int = 0, osl_cap: Optional[int] = None
+               ) -> List[TraceEntry]:
+    """Open-loop workload: arrival process x Natural-Reasoning (ISL, OSL)."""
+    ts = process.times(n, seed=seed)
+    lens = sample(spec, n, seed=seed + 1)
+    cap = osl_cap or 10 ** 9
+    return [TraceEntry(arrival=float(t), isl=int(i), osl=int(min(o, cap)))
+            for t, (i, o) in zip(ts, lens)]
+
+
+def save_trace(path: str, trace: List[TraceEntry]):
+    with open(path, "w") as f:
+        for e in trace:
+            f.write(json.dumps(dataclasses.asdict(e)) + "\n")
+
+
+def load_trace(path: str) -> List[TraceEntry]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                d = json.loads(line)
+                out.append(TraceEntry(float(d["arrival"]), int(d["isl"]),
+                                      int(d["osl"])))
+    return out

@@ -1,0 +1,113 @@
+"""Fleet-level metric aggregation: SLO attainment, goodput, and per-replica
+KV-saturation timelines (the paper's serving-level claims — Obs 3/4: the
+fleet's tail is set by the first replica to saturate its KV pool)."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+from repro.core.metrics import SLO, goodput_tok_s, slo_attainment
+from repro.core.request import Request
+from repro.cluster.worker import Worker
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    rid: int
+    src: str                      # prefill worker name
+    dst: str                      # decode worker name
+    t_eject: float
+    t_ready: float                # eject + modeled KV-transfer time
+    t_delivered: float            # when the decode worker adopted it
+    context_tokens: int
+
+    @property
+    def transfer_s(self) -> float:
+        return self.t_ready - self.t_eject
+
+
+class ClusterMetrics:
+    """Aggregates per-worker MetricsLog + cluster-level migration records."""
+
+    def __init__(self, workers: List[Worker]):
+        self.workers = workers
+        self.migrations: List[MigrationRecord] = []
+
+    # ------------------------------------------------------------- collection
+    def note_migration(self, rec: MigrationRecord):
+        self.migrations.append(rec)
+
+    def finished_requests(self) -> List[Request]:
+        return [r for w in self.workers for r in w.engine.metrics.finished]
+
+    def saturation_timeline(self, worker: Worker) -> List[Dict[str, float]]:
+        return [{"t": p.t, "kv_util": p.kv_util}
+                for p in worker.engine.metrics.timeline]
+
+    def time_to_saturation(self, worker: Worker,
+                           threshold: float = 0.95) -> Optional[float]:
+        """First time the worker's KV pool crossed `threshold` utilisation."""
+        for p in worker.engine.metrics.timeline:
+            if p.kv_util >= threshold:
+                return p.t
+        return None
+
+    # -------------------------------------------------------------- summaries
+    def summary(self, slo: Optional[SLO] = None) -> Dict:
+        reqs = self.finished_requests()
+        gen = sum(r.generated for r in reqs)
+        t_end = max((r.t_finished or 0.0 for r in reqs), default=0.0)
+        t0 = min((r.arrival for r in reqs), default=0.0)
+        dur = max(t_end - t0, 1e-9)
+        per_worker = {}
+        for w in self.workers:
+            tl = w.engine.metrics.timeline
+            sat = self.time_to_saturation(w)
+            per_worker[w.name] = {
+                "role": w.role,
+                "n_finished": len(w.engine.metrics.finished),
+                "peak_kv_util": max((p.kv_util for p in tl), default=0.0),
+                "mean_kv_util": statistics.fmean(
+                    [p.kv_util for p in tl]) if tl else 0.0,
+                "preemptions": w.engine.sched.n_preemptions,
+                "time_to_saturation_s": sat,
+            }
+        out = {
+            "n_finished": len(reqs),
+            "gen_tokens": gen,
+            "duration_s": dur,
+            "throughput_tok_s": gen / dur,
+            "n_migrations": len(self.migrations),
+            "mean_transfer_s": statistics.fmean(
+                [m.transfer_s for m in self.migrations])
+            if self.migrations else 0.0,
+            "workers": per_worker,
+            # fleet tail is set by the FIRST saturating replica (Obs 4)
+            "first_saturation_s": min(
+                (v["time_to_saturation_s"] for v in per_worker.values()
+                 if v["time_to_saturation_s"] is not None), default=None),
+        }
+        if slo is not None:
+            out["slo_attainment"] = slo_attainment(reqs, slo)
+            out["goodput_tok_s"] = goodput_tok_s(reqs, slo, dur)
+        return out
+
+    def request_summary(self) -> Dict:
+        """Latency distributions over all finished requests (fleet-wide)."""
+        reqs = self.finished_requests()
+
+        def stats(vals):
+            vals = sorted(v for v in vals if v is not None)
+            if not vals:
+                return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+            return {"mean": statistics.fmean(vals),
+                    "p50": vals[len(vals) // 2],
+                    "p95": vals[min(int(len(vals) * 0.95), len(vals) - 1)],
+                    "max": vals[-1]}
+        return {
+            "ttft_s": stats([r.ttft() for r in reqs]),
+            "tpot_s": stats([r.tpot() for r in reqs]),
+            "e2e_s": stats([r.e2e() for r in reqs]),
+            "waiting_s": stats([r.waiting_time() for r in reqs]),
+        }

@@ -1,0 +1,176 @@
+"""Pluggable cluster scheduling policies.
+
+``RoutingPolicy``   — picks a worker for a *new* request (colocated fleets and
+                      the prefill pool of a disaggregated fleet).
+``DispatchPolicy``  — picks a decode worker for a *migrated* prefill-complete
+                      request in a disaggregated fleet.
+
+The memory-aware policy is the paper's Obs 3/4 recommendation ("DP should be
+combined with ... memory-aware routing"; "tail latency is dominated by the
+replica that reaches KV saturation first"): score replicas by predicted KV
+headroom with a straggler penalty folded into one scalar — a replica whose
+EWMA step latency runs above the fleet mean is charged a headroom-fraction
+equivalent, so slowness and saturation trade off in the same unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.request import Request
+from repro.cluster.worker import Worker
+
+
+def pool_capacity_tokens(w: Worker) -> int:
+    return w.engine.alloc.n_pages * w.engine.alloc.page_size
+
+
+def fits_worker(w: Worker, prompt_len: int, max_new: int) -> bool:
+    """Hard KV-capacity feasibility: a prefill-only worker needs just the
+    prompt (+first token) to fit; everyone else needs the full context."""
+    prefill_only = w.engine.sched.cfg.prefill_only
+    need = prompt_len + (1 if prefill_only else max_new) + 1
+    return need <= pool_capacity_tokens(w)
+
+
+def eligible_indices(workers: List[Worker], prompt_len: int,
+                     max_new: int) -> List[int]:
+    """Workers that can hold the request at all — policies must not route to
+    a worker whose pool is structurally too small (heterogeneous fleets), or
+    the engine's fits-alone invariant breaks mid-run."""
+    idx = [i for i, w in enumerate(workers)
+           if fits_worker(w, prompt_len, max_new)]
+    if not idx:
+        raise ValueError(
+            f"no worker can hold a ({prompt_len} in, {max_new} out) request"
+            f" (pool capacities: {[pool_capacity_tokens(w) for w in workers]})")
+    return idx
+
+
+class RoutingPolicy:
+    """Chooses the worker index for a new request."""
+
+    def pick(self, workers: List[Worker], prompt_len: int,
+             max_new: int) -> int:
+        raise NotImplementedError
+
+    def note_step(self, i: int, dt: float):
+        """Observe one engine iteration of worker i (straggler tracking)."""
+
+
+class RoundRobin(RoutingPolicy):
+    def __init__(self):
+        self._rr = -1
+
+    def pick(self, workers, prompt_len, max_new):
+        ok = set(eligible_indices(workers, prompt_len, max_new))
+        for step in range(1, len(workers) + 1):
+            i = (self._rr + step) % len(workers)
+            if i in ok:
+                self._rr = i
+                return i
+        raise AssertionError("unreachable: eligible_indices is non-empty")
+
+
+class JoinShortestQueue(RoutingPolicy):
+    def pick(self, workers, prompt_len, max_new):
+        return min(eligible_indices(workers, prompt_len, max_new),
+                   key=lambda i: workers[i].queue_depth)
+
+
+@dataclasses.dataclass
+class MemoryAware(RoutingPolicy):
+    """score_i = -headroom_frac_i + straggler_penalty * (lat_i/mean - 1).
+
+    Both terms are dimensionless: headroom as a fraction of the page pool,
+    straggle as relative EWMA step latency. The old implementation kept the
+    straggler term in the second slot of a tuple key, where it only ever
+    broke exact-headroom ties."""
+    straggler_penalty: float = 2.0
+    ewma_alpha: float = 0.2
+
+    def __post_init__(self):
+        self._lat_ewma: List[float] = []
+
+    def note_step(self, i: int, dt: float):
+        while len(self._lat_ewma) <= i:
+            self._lat_ewma.append(0.0)
+        a = self.ewma_alpha
+        self._lat_ewma[i] = (1 - a) * self._lat_ewma[i] + a * dt
+
+    def _straggle(self, i: int) -> float:
+        if i >= len(self._lat_ewma):
+            return 0.0
+        mean = sum(self._lat_ewma) / len(self._lat_ewma)
+        if mean <= 0:
+            return 0.0
+        return self._lat_ewma[i] / mean - 1.0
+
+    def pick(self, workers, prompt_len, max_new):
+        def score(i):
+            w = workers[i]
+            head = w.predicted_headroom_pages() \
+                - w.predicted_candidate_pages(prompt_len, max_new)
+            frac = head / max(w.engine.alloc.n_pages, 1)
+            return -frac + self.straggler_penalty * self._straggle(i)
+        return min(eligible_indices(workers, prompt_len, max_new), key=score)
+
+
+def make_policy(name: str, **kw) -> RoutingPolicy:
+    table = {"round_robin": RoundRobin, "jsq": JoinShortestQueue,
+             "memory_aware": MemoryAware}
+    if name not in table:
+        raise ValueError(f"unknown routing policy {name!r} "
+                         f"(have {sorted(table)})")
+    return table[name](**kw)
+
+
+# ---------------------------------------------------------------- dispatchers
+class DispatchPolicy:
+    """Chooses the decode worker that adopts a migrated request."""
+
+    def pick(self, workers: List[Worker], req: Request) -> Optional[int]:
+        raise NotImplementedError
+
+
+class LeastKVHeadroom(DispatchPolicy):
+    """Best-fit decode dispatch: among decode workers whose predicted
+    headroom still fits the request's remaining growth, pick the one with the
+    LEAST headroom — packing tight keeps the emptiest replica free for the
+    long-decode tail (the requests that actually hit the capacity wall,
+    Obs 4). Falls back to the most-headroom worker when none fits."""
+
+    def pick(self, workers, req):
+        if not workers:
+            return None
+        need = [None] * len(workers)
+        fits = []
+        for i, w in enumerate(workers):
+            remaining = req.max_new_tokens - req.generated
+            pages = w.engine.alloc.pages_for(req.context_len + remaining + 1)
+            head = w.predicted_headroom_pages()
+            need[i] = head
+            if head >= pages:
+                fits.append(i)
+        if fits:
+            return min(fits, key=lambda i: need[i])
+        return max(range(len(workers)), key=lambda i: need[i])
+
+
+class MostKVHeadroom(DispatchPolicy):
+    """Worst-fit (load-levelling) decode dispatch: always the emptiest."""
+
+    def pick(self, workers, req):
+        if not workers:
+            return None
+        return max(range(len(workers)),
+                   key=lambda i: workers[i].predicted_headroom_pages())
+
+
+def make_dispatcher(name: str) -> DispatchPolicy:
+    table = {"least_headroom": LeastKVHeadroom,
+             "most_headroom": MostKVHeadroom}
+    if name not in table:
+        raise ValueError(f"unknown dispatch policy {name!r} "
+                         f"(have {sorted(table)})")
+    return table[name]()

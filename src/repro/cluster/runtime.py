@@ -1,0 +1,241 @@
+"""Event-driven cluster runtime: many engines, one virtual clock.
+
+Drives a heterogeneous fleet of `InferenceEngine` instances (possibly with
+different `ParallelismPlan`s / `Hardware`) as a conservative discrete-event
+simulation: each iteration advances the worker whose next action is earliest,
+so worker clocks stay causally consistent and fleet-level timestamps
+(arrival -> route -> admit -> first token -> migrate -> finish) are monotone
+along every request's path.
+
+Two serving modes:
+
+  colocated     — every worker runs prefill+decode interleaved; new requests
+                  are routed by a pluggable `RoutingPolicy` (the paper's DP
+                  baseline, §V-B).
+  disaggregated — prefill workers run chunked prefill only; on first token
+                  the request is ejected, pays the modeled KV-transfer time
+                  (`perf_model.kv_transfer_time` over the inter-node fabric),
+                  and is adopted by a decode worker chosen by a
+                  `DispatchPolicy` (§III phase divergence made structural).
+
+Open-loop arrivals: the runtime holds the trace and routes each request when
+the cluster clock reaches its arrival; engines additionally gate admission on
+`arrival > now` (no scheduler sees a request from the future).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import List, Optional, Sequence, Union
+
+from repro.core import perf_model as pm
+from repro.core.request import Request
+from repro.cluster.arrivals import TraceEntry
+from repro.cluster.metrics import ClusterMetrics, MigrationRecord
+from repro.cluster.policies import (DispatchPolicy, RoutingPolicy,
+                                    make_dispatcher, make_policy)
+from repro.cluster.worker import Worker
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    policy: Union[str, RoutingPolicy] = "memory_aware"
+    dispatcher: Union[str, DispatchPolicy] = "least_headroom"
+    transfer_dtype_bytes: int = 2     # KV wire format (fp8 transfer: 1)
+    snapshot_every: int = 1
+
+
+class ClusterRuntime:
+    def __init__(self, workers: Sequence[Worker],
+                 cfg: Optional[ClusterConfig] = None):
+        if not workers:
+            raise ValueError("cluster needs at least one worker")
+        if not all(w.engine.virtual_clock for w in workers):
+            raise ValueError("cluster co-simulation requires virtual-clock "
+                             "engines (SimRunner)")
+        self.workers = list(workers)
+        names = [w.name for w in self.workers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"worker names must be unique (metrics and "
+                             f"migration records key on them): {names}")
+        self.cfg = cfg or ClusterConfig()
+        self.policy = self.cfg.policy if isinstance(self.cfg.policy,
+                                                    RoutingPolicy) \
+            else make_policy(self.cfg.policy)
+        self.dispatcher = self.cfg.dispatcher \
+            if isinstance(self.cfg.dispatcher, DispatchPolicy) \
+            else make_dispatcher(self.cfg.dispatcher)
+
+        self.prefill_pool = [w for w in self.workers if w.role == "prefill"]
+        self.decode_pool = [w for w in self.workers if w.role == "decode"]
+        self.colocated_pool = [w for w in self.workers
+                               if w.role == "colocated"]
+        self.disaggregated = bool(self.prefill_pool)
+        if self.disaggregated and not self.decode_pool:
+            raise ValueError("prefill workers need a decode pool to "
+                             "migrate into")
+        # new requests land on prefill workers (disaggregated) or on the
+        # colocated fleet
+        self.route_pool = self.prefill_pool if self.disaggregated \
+            else self.colocated_pool
+        if not self.route_pool:
+            raise ValueError("no routable workers (prefill or colocated)")
+
+        # request ids key allocator tables; migration moves requests between
+        # engines, so the whole fleet shares one counter — seeded past any
+        # rid an engine already issued before joining the cluster
+        start = 1 + max((r for w in self.workers
+                         for r in w.engine.issued_rids()), default=-1)
+        rid_source = itertools.count(start)
+        for w in self.workers:
+            w.engine.adopt_rid_source(rid_source)
+
+        self._arrivals: List = []          # (t, seq, TraceEntry) min-heap
+        self._arr_seq = itertools.count()
+        self._migrating: List[dict] = []   # in-flight KV transfers
+        self.metrics = ClusterMetrics(self.workers)
+        self.submitted: List[Request] = []
+
+    # ------------------------------------------------------------------- api
+    def submit(self, isl: int, osl: int, arrival: float = 0.0):
+        from repro.cluster.policies import pool_capacity_tokens
+        if self.disaggregated:
+            cap = max(pool_capacity_tokens(w) for w in self.decode_pool)
+            if isl + osl + 1 > cap:
+                raise ValueError(f"request ({isl} in, {osl} out) exceeds "
+                                 f"largest decode-pool KV capacity {cap}")
+            pcap = max(pool_capacity_tokens(w) for w in self.prefill_pool)
+            if isl + 2 > pcap:
+                raise ValueError(f"request prompt ({isl} tokens) exceeds "
+                                 f"largest prefill-pool KV capacity {pcap}")
+        else:
+            cap = max(pool_capacity_tokens(w) for w in self.route_pool)
+            if isl + osl + 1 > cap:
+                raise ValueError(f"request ({isl} in, {osl} out) exceeds "
+                                 f"largest worker KV capacity {cap}")
+        heapq.heappush(self._arrivals,
+                       (arrival, next(self._arr_seq),
+                        TraceEntry(arrival, isl, osl)))
+
+    def submit_trace(self, trace: Sequence[TraceEntry]):
+        for e in trace:
+            self.submit(e.isl, e.osl, e.arrival)
+
+    def run(self, max_steps: int = 10 ** 7) -> ClusterMetrics:
+        for _ in range(max_steps):
+            self._deliver_migrations()
+            self._route_arrivals()
+            w = self._next_worker()
+            if w is None:
+                if self._migrating:
+                    # decode pool saturated and idle: let the retry clock of
+                    # the earliest transfer pull the fleet forward
+                    t = min(m["ready"] for m in self._migrating)
+                    for dw in self.decode_pool:
+                        if not dw.engine.sched.has_work:
+                            dw.engine.advance_to(t)
+                    self._deliver_migrations()
+                    if self._next_worker() is None and not self._arrivals:
+                        if self._migrating:      # truly wedged: no KV room
+                            raise RuntimeError(
+                                f"{len(self._migrating)} migrated requests "
+                                "cannot fit any decode worker")
+                    continue
+                if self._arrivals:
+                    continue                     # routing will gate-release
+                break                            # fleet drained
+            t0 = w.engine.now
+            w.engine.step()
+            if w in self.route_pool:
+                self.policy.note_step(self.route_pool.index(w),
+                                      w.engine.now - t0)
+            if w.role == "prefill":
+                self._harvest_prefill_complete(w)
+        return self.metrics
+
+    # ------------------------------------------------------------- internals
+    def _next_action_time(self, w: Worker) -> Optional[float]:
+        if w.engine.sched.has_work:
+            return w.engine.now
+        nxt = w.engine.next_arrival()
+        if nxt is not None:
+            return max(w.engine.now, nxt)
+        return None
+
+    def _next_worker(self) -> Optional[Worker]:
+        best, best_t = None, None
+        for w in self.workers:
+            t = self._next_action_time(w)
+            if t is not None and (best_t is None or t < best_t):
+                best, best_t = w, t
+        return best
+
+    def _horizon(self) -> Optional[float]:
+        """Earliest time anything already in the system acts next."""
+        ts = [t for t in (self._next_action_time(w) for w in self.workers)
+              if t is not None]
+        ts += [m["ready"] for m in self._migrating]
+        return min(ts, default=None)
+
+    def _route_arrivals(self):
+        while self._arrivals:
+            t = self._arrivals[0][0]
+            horizon = self._horizon()
+            if horizon is not None and t > horizon:
+                break                  # the future: in-flight work acts first
+            _, _, entry = heapq.heappop(self._arrivals)
+            i = self.policy.pick(self.route_pool, entry.isl, entry.osl)
+            req = self.route_pool[i].engine.submit(
+                entry.isl, entry.osl, arrival=entry.arrival)
+            self.submitted.append(req)
+
+    def _harvest_prefill_complete(self, w: Worker):
+        done = [r for r in w.engine.sched.running
+                if r.prefill_done and r.generated >= 1]
+        for req in done:
+            w.engine.eject(req)
+            hw = w.engine.runner.hw
+            tt = pm.kv_transfer_time(w.engine.cfg_model, req.context_len, hw,
+                                     self.cfg.transfer_dtype_bytes)
+            self._migrating.append({
+                "req": req, "src": w.name,
+                "eject": w.engine.now, "ready": w.engine.now + tt,
+            })
+
+    def _deliver_migrations(self):
+        still = []
+        for m in sorted(self._migrating, key=lambda m: m["ready"]):
+            req, ready = m["req"], m["ready"]
+            # delivering to an idle worker fast-forwards its clock to the
+            # transfer completion — only allowed when that completion is the
+            # fleet's next event, or an earlier-ready transfer (ejected on a
+            # later step) would find the idle time already burned
+            hz = min((t for t in (self._next_action_time(w)
+                                  for w in self.workers) if t is not None),
+                     default=float("inf"))
+            remaining = req.max_new_tokens - req.generated
+
+            def can_hold(dw):
+                return req.context_len + remaining + 1 \
+                    <= dw.engine.alloc.n_pages * dw.engine.alloc.page_size
+
+            eligible = [dw for dw in self.decode_pool if can_hold(dw)
+                        and (dw.engine.now >= ready
+                             or (ready <= hz
+                                 and not dw.engine.sched.has_work))]
+            i = self.dispatcher.pick(eligible, req) if eligible else None
+            if i is None:
+                still.append(m)
+                continue
+            target = eligible[i]
+            target.engine.advance_to(ready)
+            if not target.engine.inject(req):
+                still.append(m)        # no KV/seq room yet: retry next tick
+                continue
+            self.metrics.note_migration(MigrationRecord(
+                rid=req.rid, src=m["src"], dst=target.name,
+                t_eject=m["eject"], t_ready=ready,
+                t_delivered=target.engine.now,
+                context_tokens=req.context_len))
+        self._migrating = still

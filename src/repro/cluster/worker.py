@@ -1,0 +1,120 @@
+"""A cluster worker: one `InferenceEngine` plus its fleet role.
+
+Roles (paper §III phase divergence / disaggregated serving):
+  colocated — runs chunked prefill and decode interleaved (the baseline the
+              paper characterises; prefill chunks inflate decode TPOT).
+  prefill   — runs prefill only; a request is migrated out right after its
+              first token (its KV ships to a decode worker).
+  decode    — receives migrated prefill-complete requests and decodes them
+              to completion; never executes prefill.
+
+Workers expose the KV-headroom prediction the routing policies score with —
+the same predicted-peak estimate KV-aware admission uses (Obs 1/8), so the
+router and the admission controller agree about saturation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import perf_model as pm
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.request import Request
+from repro.core.runner import SimRunner
+
+ROLES = ("colocated", "prefill", "decode")
+
+
+@dataclasses.dataclass
+class Worker:
+    engine: InferenceEngine
+    role: str = "colocated"
+    name: str = ""
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown worker role {self.role!r}")
+        if not self.name:
+            self.name = f"{self.role}-{id(self.engine) & 0xffff:04x}"
+
+    # ------------------------------------------------------------ state views
+    @property
+    def now(self) -> float:
+        return self.engine.now
+
+    @property
+    def has_work(self) -> bool:
+        return self.engine.has_work
+
+    @property
+    def queue_depth(self) -> int:
+        s = self.engine.sched
+        return len(s.waiting) + len(s.running)
+
+    def kv_util(self) -> float:
+        return self.engine.alloc.utilization()
+
+    def predicted_used_pages(self, req: Optional[Request] = None,
+                             extra_tokens: int = 0) -> float:
+        """Predicted peak page demand of everything queued/running (plus an
+        optional candidate request), using the admission estimator's OSL
+        prediction. Decode growth is not predicted for prefill-role workers —
+        requests leave them after the first token."""
+        e = self.engine
+        est = e.sched.admission.estimator.predict
+        grow = self.role != "prefill"
+
+        def peak(r: Request) -> int:
+            future = max(est(r), r.generated) if grow else r.generated
+            return e.alloc.pages_for(r.isl + int(future) + 1)
+
+        pred = sum(peak(r) for r in e.sched.running)
+        pred += sum(peak(r) for r in e.sched.waiting)
+        if req is not None:
+            pred += peak(req)
+        if extra_tokens:
+            pred += e.alloc.pages_for(extra_tokens)
+        return pred
+
+    def predicted_headroom_pages(self, req: Optional[Request] = None,
+                                 extra_tokens: int = 0) -> float:
+        return self.engine.alloc.n_pages - self.predicted_used_pages(
+            req, extra_tokens)
+
+    def predicted_candidate_pages(self, prompt_len: int, max_new: int) -> int:
+        """Role-aware page demand of a prospective request: prefill workers
+        hold only the prompt (+first token); others grow by the predicted
+        OSL — the same accounting `predicted_used_pages` applies to what's
+        already queued."""
+        future = 0
+        if self.role != "prefill":
+            est = self.engine.sched.admission.estimator
+            future = int(est.predict_tokens(max_new))
+        return self.engine.alloc.pages_for(prompt_len + future + 1)
+
+
+def make_sim_worker(cfg: ModelConfig, plan: pm.ParallelismPlan,
+                    hw: pm.Hardware = pm.H200, *, role: str = "colocated",
+                    name: str = "", n_pages: Optional[int] = None,
+                    max_seqs: int = 256, max_batched_tokens: int = 8192,
+                    chunk_size: int = 512, admission: Optional[str] = None,
+                    dtype_bytes: int = 2, rid_source=None) -> Worker:
+    """Virtual-clock worker with paper-calibrated capacity defaults.
+
+    Admission defaults: prefill workers admit naively (their requests never
+    grow KV — predicting decode growth there would starve the pool), others
+    use KV-aware admission.
+    """
+    if n_pages is None:
+        cap = pm.kv_capacity_tokens(cfg, plan, hw, dtype_bytes)
+        n_pages = max(cap // 16, 64)
+    if admission is None:
+        admission = "naive" if role == "prefill" else "kv_aware"
+    ecfg = EngineConfig(n_pages=n_pages, max_num_seqs=max_seqs,
+                        max_num_batched_tokens=max_batched_tokens,
+                        chunk_size=chunk_size, admission_mode=admission,
+                        prefill_only=role == "prefill")
+    eng = InferenceEngine(cfg, ecfg, SimRunner(cfg, plan, hw, dtype_bytes),
+                          rid_source=rid_source)
+    return Worker(engine=eng, role=role, name=name)

@@ -26,9 +26,12 @@ class OSLEstimator:
         self._est = osl if self._est is None else \
             (1 - self.alpha) * self._est + self.alpha * osl
 
-    def predict(self, req: Request) -> float:
+    def predict_tokens(self, max_new: int) -> float:
         est = self._est if self._est is not None else self.prior
-        return min(est, req.max_new_tokens)
+        return min(est, max_new)
+
+    def predict(self, req: Request) -> float:
+        return self.predict_tokens(req.max_new_tokens)
 
 
 @dataclasses.dataclass

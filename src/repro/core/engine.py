@@ -1,9 +1,16 @@
 """The inference engine: continuous batching + paged KV + chunked prefill +
 preemption + KV-aware admission + online concurrency tuning, with identical
-scheduling logic over a real JAX runner or the virtual-clock simulator."""
+scheduling logic over a real JAX runner or the virtual-clock simulator.
+
+Open-loop replay: ``submit(arrival=t)`` with a future ``t`` holds the request
+in a pending heap, invisible to the scheduler until the engine clock reaches
+``t`` (the cluster layer's arrival-time gating). ``eject``/``inject`` are the
+request hand-off hooks the disaggregated prefill/decode runtime uses to
+migrate a prefill-complete request between engines."""
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import time
 from typing import List, Optional
@@ -27,23 +34,27 @@ class EngineConfig:
     admission_mode: str = "kv_aware"     # naive | kv_aware
     autotune: bool = False
     snapshot_every: int = 1
+    prefill_only: bool = False           # disaggregated prefill worker
 
 
 class InferenceEngine:
     def __init__(self, cfg_model: ModelConfig, ecfg: EngineConfig, runner,
-                 virtual_clock: bool = True):
+                 virtual_clock: bool = True, rid_source=None):
         self.cfg_model = cfg_model
         self.ecfg = ecfg
         self.runner = runner
         self.alloc = PagedAllocator(ecfg.n_pages, ecfg.page_size)
         self.sched = Scheduler(
             SchedulerConfig(ecfg.max_num_seqs, ecfg.max_num_batched_tokens,
-                            ecfg.chunk_size),
+                            ecfg.chunk_size, prefill_only=ecfg.prefill_only),
             self.alloc, AdmissionPolicy(mode=ecfg.admission_mode))
         self.metrics = MetricsLog()
         self.virtual_clock = virtual_clock
         self.now = 0.0
-        self._rid = itertools.count()
+        # rid_source: share one counter across engines whose requests may
+        # migrate between them (rids key the paged allocator tables)
+        self._rid = rid_source if rid_source is not None else itertools.count()
+        self._pending: List = []         # (arrival, rid, Request) min-heap
         self._gen_total = 0
         self._prefill_total = 0
         self._steps = 0
@@ -58,13 +69,68 @@ class InferenceEngine:
         req = Request(rid=next(self._rid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens,
                       arrival=self.now if arrival is None else arrival)
-        self.sched.submit(req)
+        if req.arrival > self.now:
+            self.sched.validate(req)     # fail fast, like sched.submit
+            heapq.heappush(self._pending, (req.arrival, req.rid, req))
+        else:
+            self.sched.submit(req)
         return req
+
+    def issued_rids(self) -> List[int]:
+        """Every rid this engine currently knows about (for seeding a shared
+        fleet-wide counter past them)."""
+        reqs = [*self.sched.running, *self.sched.waiting,
+                *self.metrics.finished, *(p[2] for p in self._pending)]
+        return [r.rid for r in reqs]
+
+    def adopt_rid_source(self, source):
+        """Share a fleet-wide rid counter (migration moves requests between
+        engines, and rids key the paged-allocator tables)."""
+        self._rid = source
+
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work or bool(self._pending)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0][0] if self._pending else None
+
+    def advance_to(self, t: float):
+        """Fast-forward an idle clock (no in-flight work ages)."""
+        self.now = max(self.now, t)
+
+    def _release_arrivals(self):
+        while self._pending and self._pending[0][0] <= self.now:
+            self.sched.submit(heapq.heappop(self._pending)[2])
+
+    def eject(self, req: Request) -> Request:
+        """Remove a request from this engine without finishing it (the
+        disaggregated hand-off: its KV pages are freed here and re-allocated
+        on the target via ``inject``)."""
+        if req in self.sched.running:
+            self.sched.running.remove(req)
+        elif req in self.sched.waiting:
+            self.sched.waiting.remove(req)
+        self.alloc.free(req.rid)
+        if not self.virtual_clock:
+            self.runner.release(req)
+        return req
+
+    def inject(self, req: Request) -> bool:
+        """Adopt a migrated prefill-complete request into the running set.
+        Returns False when no KV/concurrency room (caller retries later)."""
+        return self.sched.inject_running(req)
 
     def step(self) -> bool:
         """One engine iteration. Returns False when idle."""
+        self._release_arrivals()
         if not self.sched.has_work:
-            return False
+            nxt = self.next_arrival()
+            if nxt is None:
+                return False
+            # open-loop idle gap: jump to the next arrival
+            self.advance_to(nxt)
+            self._release_arrivals()
         t0 = time.monotonic()
         plan = self.sched.plan_step()
         for r in plan.admitted:

@@ -1,6 +1,7 @@
 """Engine telemetry — the paper's §III-D metric set: TTFT, TPOT, generation
 throughput, E2E, request lifecycle decomposition, KV saturation, preemptions,
-plus modeled HBM-bandwidth utilisation in simulated mode."""
+plus modeled HBM-bandwidth utilisation in simulated mode, and SLO-goodput
+accounting (tokens/s delivered within latency targets) for the cluster layer."""
 from __future__ import annotations
 
 import dataclasses
@@ -8,6 +9,51 @@ import statistics
 from typing import Dict, List, Optional
 
 from repro.core.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request latency targets. A request attains the SLO iff its TTFT
+    and its mean TPOT both meet their targets (the serving-level contract the
+    paper's goodput discussions assume). A target of None is unconstrained."""
+    ttft_s: Optional[float] = None
+    tpot_s: Optional[float] = None
+
+    def attained(self, req: Request) -> bool:
+        if req.t_finished is None:
+            return False
+        if self.ttft_s is not None:
+            ttft = req.ttft()
+            if ttft is None or ttft > self.ttft_s:
+                return False
+        if self.tpot_s is not None:
+            tpot = req.tpot()
+            if tpot is not None and tpot > self.tpot_s:
+                return False
+        return True
+
+
+def slo_attainment(reqs: List[Request], slo: SLO) -> float:
+    """Fraction of finished requests meeting the SLO."""
+    done = [r for r in reqs if r.t_finished is not None]
+    if not done:
+        return 0.0
+    return sum(slo.attained(r) for r in done) / len(done)
+
+
+def goodput_tok_s(reqs: List[Request], slo: SLO,
+                  duration_s: Optional[float] = None) -> float:
+    """Fleet goodput: generated tokens of SLO-attaining requests per second
+    (tokens served outside the SLO are throughput, not goodput)."""
+    done = [r for r in reqs if r.t_finished is not None]
+    if not done:
+        return 0.0
+    good = sum(r.generated for r in done if slo.attained(r))
+    if duration_s is None:
+        t0 = min(r.arrival for r in done)
+        t1 = max(r.t_finished for r in done)
+        duration_s = max(t1 - t0, 1e-9)
+    return good / duration_s
 
 
 @dataclasses.dataclass
@@ -72,3 +118,10 @@ class MetricsLog:
                 [p.kv_util for p in self.timeline]) if self.timeline else 0.0,
         }
         return out
+
+    def slo_summary(self, slo: SLO, duration_s: Optional[float] = None
+                    ) -> Dict[str, float]:
+        return {
+            "slo_attainment": slo_attainment(self.finished, slo),
+            "goodput_tok_s": goodput_tok_s(self.finished, slo, duration_s),
+        }

@@ -67,9 +67,13 @@ def weight_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     return cfg.param_count() * dtype_bytes
 
 
-def kv_bytes(cfg: ModelConfig, tokens: int, dtype_bytes: int = 2) -> float:
+def kv_bytes(cfg: ModelConfig, tokens: int, dtype_bytes: int = 2,
+             n_seqs: int = 1) -> float:
+    """Cache footprint of `n_seqs` sequences totalling `tokens` of context:
+    per-token KV across all attention layers plus the constant per-sequence
+    recurrent state (SSM/xLSTM/conv)."""
     return cfg.kv_bytes_per_token(dtype_bytes) * tokens \
-        + cfg.state_bytes_per_seq(dtype_bytes) * 0  # state added per-seq below
+        + cfg.state_bytes_per_seq(dtype_bytes) * n_seqs
 
 
 def kv_capacity_tokens(cfg: ModelConfig, plan: ParallelismPlan, hw: Hardware,
@@ -80,7 +84,7 @@ def kv_capacity_tokens(cfg: ModelConfig, plan: ParallelismPlan, hw: Hardware,
     shard = plan.tp * plan.pp
     w = weight_bytes(cfg, dtype_bytes) / shard
     free = hw.hbm_cap * (1 - overhead) - w
-    per_tok = cfg.kv_bytes_per_token(cache_dtype_bytes) / shard
+    per_tok = kv_bytes(cfg, 1, cache_dtype_bytes, n_seqs=0) / shard
     if per_tok <= 0:                          # attention-free: state-bound
         return 10 ** 12
     return max(int(free / per_tok), 0)
@@ -207,3 +211,14 @@ def pp_transport_time(cfg: ModelConfig, tokens: int, plan: ParallelismPlan,
         return 0.0
     bw = hw.inter_bw or hw.link_bw
     return (plan.pp - 1) * tokens * cfg.d_model * dtype_bytes / bw
+
+
+def kv_transfer_time(cfg: ModelConfig, context_tokens: int, hw: Hardware,
+                     cache_dtype_bytes: int = 2, n_seqs: int = 1) -> float:
+    """Prefill→decode migration cost in a disaggregated deployment: ship the
+    request's whole KV cache (plus any recurrent state) across the inter-node
+    fabric. Strictly monotone in context length; the alpha term models the
+    per-transfer handshake/launch latency."""
+    payload = kv_bytes(cfg, context_tokens, cache_dtype_bytes, n_seqs=n_seqs)
+    bw = hw.inter_bw or hw.link_bw
+    return payload / bw + hw.link_alpha

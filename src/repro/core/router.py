@@ -5,6 +5,11 @@ prevent each replica from independently entering a preemption-heavy regime"
 and "tail latency is dominated by the replica that reaches KV saturation
 first" — the router scores replicas by predicted KV headroom (not just queue
 depth) and penalises stragglers via an EWMA of per-step latency.
+
+The policies themselves live in ``repro.cluster.policies`` as pluggable
+``RoutingPolicy`` objects shared with the cluster runtime; ``DPRouter`` is
+the single-router colocated front-end that co-simulates its replicas on a
+shared virtual clock (the pre-cluster API, kept for the DP benchmarks).
 """
 from __future__ import annotations
 
@@ -25,39 +30,28 @@ class RouterConfig:
 class DPRouter:
     def __init__(self, replicas: List[InferenceEngine],
                  cfg: Optional[RouterConfig] = None):
+        # deferred upward import: policies live with the cluster layer (they
+        # score Workers); core stays importable standalone and the cycle
+        # (cluster.worker -> core.engine) is avoided. Keep cluster imports
+        # out of core module scope.
+        from repro.cluster.policies import RoutingPolicy, make_policy
+        from repro.cluster.worker import Worker
         self.replicas = replicas
         self.cfg = cfg or RouterConfig()
-        self._rr = 0
-        self._lat_ewma = [0.0] * len(replicas)
-        self._last_t = [0.0] * len(replicas)
+        self.workers = [Worker(engine=e, role="colocated", name=f"dp{i}")
+                        for i, e in enumerate(replicas)]
+        if self.cfg.policy == "memory_aware":
+            self.policy: RoutingPolicy = make_policy(
+                "memory_aware", straggler_penalty=self.cfg.straggler_penalty,
+                ewma_alpha=self.cfg.ewma_alpha)
+        else:
+            self.policy = make_policy(self.cfg.policy)
 
     def note_step(self, i: int, dt: float):
-        a = self.cfg.ewma_alpha
-        self._lat_ewma[i] = (1 - a) * self._lat_ewma[i] + a * dt
+        self.policy.note_step(i, dt)
 
     def pick(self, prompt_len: int, max_new: int) -> int:
-        c = self.cfg
-        if c.policy == "round_robin":
-            self._rr = (self._rr + 1) % len(self.replicas)
-            return self._rr
-        if c.policy == "jsq":
-            return min(range(len(self.replicas)),
-                       key=lambda i: len(self.replicas[i].sched.waiting)
-                       + len(self.replicas[i].sched.running))
-        # memory_aware: predicted pages after this request, plus straggler term
-        def score(i):
-            e = self.replicas[i]
-            est = e.sched.admission.estimator.predict
-            pred = sum(e.alloc.pages_for(
-                r.isl + int(est(r))) for r in e.sched.running)
-            pred += sum(e.alloc.pages_for(r.isl + int(est(r)))
-                        for r in e.sched.waiting)
-            pred += e.alloc.pages_for(prompt_len + max_new)
-            headroom = e.alloc.n_pages - pred
-            mean_lat = (sum(self._lat_ewma) / len(self._lat_ewma)) or 1e-9
-            straggle = self._lat_ewma[i] / mean_lat
-            return (-headroom, straggle * c.straggler_penalty)
-        return min(range(len(self.replicas)), key=score)
+        return self.policy.pick(self.workers, prompt_len, max_new)
 
     def submit(self, prompt, max_new: int, arrival: float = None) -> Request:
         plen = prompt if isinstance(prompt, int) else len(prompt)

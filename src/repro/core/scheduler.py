@@ -28,6 +28,9 @@ class SchedulerConfig:
     max_num_seqs: int = 256
     max_num_batched_tokens: int = 2048
     chunk_size: int = 512
+    prefill_only: bool = False   # disaggregated prefill worker: requests are
+                                 # ejected after their first token, so only
+                                 # the prompt (not the OSL) must fit the pool
 
 
 @dataclasses.dataclass
@@ -53,13 +56,29 @@ class Scheduler:
         self.n_preemptions = 0
 
     # ------------------------------------------------------------------ api
-    def submit(self, req: Request):
+    def validate(self, req: Request):
         capacity = self.alloc.n_pages * self.alloc.page_size
-        if req.isl + req.max_new_tokens + 1 > capacity:
+        peak = req.isl + (1 if self.cfg.prefill_only else req.max_new_tokens)
+        if peak + 1 > capacity:
             raise ValueError(
-                f"request {req.rid}: context {req.isl + req.max_new_tokens} "
+                f"request {req.rid}: context {peak} "
                 f"exceeds KV pool capacity {capacity} tokens")
+
+    def submit(self, req: Request):
+        self.validate(req)
         self.waiting.append(req)
+
+    def inject_running(self, req: Request) -> bool:
+        """Adopt a migrated (prefill-complete) request directly into the
+        running set, allocating pages for its existing context. Returns False
+        when the concurrency cap or the page pool has no room."""
+        if len(self.running) >= self.cfg.max_num_seqs:
+            return False
+        if not self.alloc.grow(req.rid, req.context_len):
+            return False
+        req.state = State.RUNNING
+        self.running.append(req)
+        return True
 
     @property
     def has_work(self) -> bool:
@@ -86,6 +105,11 @@ class Scheduler:
                     self._preempt(req, preempted)
                     break
                 self._preempt(victim, preempted)
+                if victim in decode:
+                    # victim already planned this step: un-plan it, or it
+                    # would emit a token whose KV was just freed and then
+                    # re-emit the same token after recompute-resume
+                    decode.remove(victim)
             if req in self.running:
                 decode.append(req)
 

@@ -27,9 +27,18 @@ class WorkloadSpec:
         return dataclasses.replace(self, name="chat", osl_median=350.0,
                                    osl_sigma=0.7, osl_max=2048)
 
+    def long_context(self) -> "WorkloadSpec":
+        """RAG/agentic profile: kilotoken prompts, same reasoning-heavy OSL —
+        the regime where prefill chunks materially stall colocated decode
+        (§III phase divergence)."""
+        return dataclasses.replace(self, name="long_context_reasoning",
+                                   isl_mode=1200.0, isl_sigma=0.5,
+                                   isl_max=6000)
+
 
 CHAT = WorkloadSpec().chatty()
 REASONING = WorkloadSpec()
+LONG_REASONING = WorkloadSpec().long_context()
 
 
 def sample(spec: WorkloadSpec, n: int, seed: int = 0

@@ -27,6 +27,17 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map across jax versions: top-level `jax.shard_map(check_vma=)`
+    (>= 0.6) vs `jax.experimental.shard_map.shard_map(check_rep=)`."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelContext:
     """Everything model code needs to know about the device layout."""

@@ -1,0 +1,258 @@
+"""Cluster runtime: open-loop arrival gating, KV-transfer model,
+colocated-vs-disaggregated equivalence, routing policies, SLO accounting."""
+import pytest
+
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.core import perf_model as pm
+from repro.core.engine import EngineConfig, InferenceEngine
+from repro.core.metrics import SLO, goodput_tok_s, slo_attainment
+from repro.core.request import Request
+from repro.core.runner import SimRunner
+from repro.cluster import (ClusterConfig, ClusterRuntime, GammaProcess,
+                           MemoryAware, PoissonProcess, TraceProcess,
+                           make_trace, make_sim_worker)
+from repro.data.reasoning import REASONING
+
+CFG = DS_DISTILL_8B
+PLAN = pm.ParallelismPlan()
+
+
+def _workers(mode, n=4, n_pages=3000, max_seqs=64):
+    if mode == "colocated":
+        return [make_sim_worker(CFG, PLAN, role="colocated", name=f"co{i}",
+                                n_pages=n_pages, max_seqs=max_seqs)
+                for i in range(n)]
+    ws = [make_sim_worker(CFG, PLAN, role="prefill", name="pre0",
+                          n_pages=n_pages, max_seqs=max_seqs)]
+    ws += [make_sim_worker(CFG, PLAN, role="decode", name=f"dec{i}",
+                           n_pages=n_pages, max_seqs=max_seqs)
+           for i in range(n - 1)]
+    return ws
+
+
+# ------------------------------------------------------------ arrival gating
+@pytest.mark.parametrize("mode", ["colocated", "disaggregated"])
+@pytest.mark.parametrize("policy", ["round_robin", "jsq", "memory_aware"])
+def test_open_loop_arrival_gating(mode, policy):
+    """No request is admitted before its arrival, under any policy/mode."""
+    rt = ClusterRuntime(_workers(mode), ClusterConfig(policy=policy))
+    trace = make_trace(PoissonProcess(rate=20.0), REASONING, 40, seed=3,
+                       osl_cap=300)
+    rt.submit_trace(trace)
+    m = rt.run()
+    reqs = m.finished_requests()
+    assert len(reqs) == 40
+    for r in reqs:
+        assert r.t_admitted is not None
+        assert r.t_admitted >= r.arrival - 1e-12, \
+            f"req {r.rid} admitted at {r.t_admitted} before {r.arrival}"
+
+
+def test_engine_level_gating_standalone():
+    """A single engine holds future-arrival requests invisible to the
+    scheduler and fast-forwards its idle clock to the next arrival."""
+    eng = InferenceEngine(
+        CFG, EngineConfig(n_pages=500, max_num_seqs=8),
+        SimRunner(CFG, PLAN, pm.H200))
+    r_future = eng.submit(100, 20, arrival=5.0)
+    assert not eng.sched.has_work          # gated: scheduler can't see it
+    assert eng.has_work
+    eng.run()
+    assert r_future.t_admitted >= 5.0
+    assert r_future.t_finished > 5.0
+
+
+def test_arrival_processes_monotone_and_rate():
+    for proc in (PoissonProcess(rate=4.0), GammaProcess(rate=4.0, cv=2.0),
+                 TraceProcess(arrivals=[0.1 * i for i in range(200)])):
+        ts = proc.times(200, seed=1)
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+    ts = PoissonProcess(rate=4.0).times(2000, seed=0)
+    mean_gap = ts[-1] / len(ts)
+    assert abs(mean_gap - 0.25) / 0.25 < 0.1
+
+
+# ------------------------------------------------------------ transfer model
+def test_kv_transfer_time_monotone_in_context():
+    prev = 0.0
+    for ctx in (128, 512, 2048, 8192, 32768):
+        t = pm.kv_transfer_time(CFG, ctx, pm.H200)
+        assert t > prev
+        prev = t
+
+
+def test_kv_transfer_uses_inter_bw_and_alpha():
+    slow = pm.Hardware(name="slow", flops=1e12, hbm_bw=1e12, hbm_cap=80e9,
+                       link_bw=400e9, link_alpha=1e-6, inter_bw=10e9)
+    fast = pm.Hardware(name="fast", flops=1e12, hbm_bw=1e12, hbm_cap=80e9,
+                       link_bw=400e9, link_alpha=1e-6, inter_bw=100e9)
+    assert pm.kv_transfer_time(CFG, 4096, slow) > \
+        pm.kv_transfer_time(CFG, 4096, fast)
+    # alpha floor: even a 1-token transfer pays the handshake
+    assert pm.kv_transfer_time(CFG, 1, fast) >= fast.link_alpha
+
+
+def test_kv_bytes_accounts_state_per_seq():
+    from repro.configs.registry import get_config
+    hybrid = get_config("zamba2-2.7b")
+    one_seq = pm.kv_bytes(hybrid, 1000, n_seqs=1)
+    four_seq = pm.kv_bytes(hybrid, 1000, n_seqs=4)
+    assert four_seq - one_seq == 3 * hybrid.state_bytes_per_seq(2)
+    assert four_seq > one_seq > 0
+
+
+# --------------------------------------------------- colocated vs disagg
+def test_colocated_and_disaggregated_complete_consistently():
+    """Both modes finish every request with identical total token counts."""
+    trace = make_trace(PoissonProcess(rate=3.0), REASONING, 50, seed=7,
+                       osl_cap=600)
+    results = {}
+    for mode in ("colocated", "disaggregated"):
+        rt = ClusterRuntime(_workers(mode), ClusterConfig())
+        rt.submit_trace(trace)
+        s = rt.run().summary()
+        results[mode] = s
+    co, dis = results["colocated"], results["disaggregated"]
+    assert co["n_finished"] == dis["n_finished"] == 50
+    assert co["gen_tokens"] == dis["gen_tokens"]
+    assert dis["n_migrations"] == 50           # every request migrated once
+    assert dis["mean_transfer_s"] > 0.0
+    assert co["n_migrations"] == 0
+
+
+def test_disaggregated_decode_workers_never_prefill_new_requests():
+    """Prefill happens on the prefill pool; decode workers only adopt
+    migrated prefill-complete requests (recompute-after-preemption aside)."""
+    ws = _workers("disaggregated")
+    rt = ClusterRuntime(ws, ClusterConfig())
+    trace = make_trace(PoissonProcess(rate=5.0), REASONING, 30, seed=9,
+                       osl_cap=400)
+    rt.submit_trace(trace)
+    m = rt.run()
+    pre = next(w for w in ws if w.role == "prefill")
+    # every request was admitted (first token) on the prefill worker, and
+    # none finished there
+    assert len(pre.engine.metrics.finished) == 0
+    decode_finished = sum(len(w.engine.metrics.finished)
+                          for w in ws if w.role == "decode")
+    assert decode_finished == 30
+    for rec in m.migrations:
+        assert rec.src == pre.name
+        assert rec.t_ready > rec.t_eject       # transfer takes positive time
+        assert rec.t_delivered >= rec.t_ready  # causality at the adopter
+
+
+def test_migrated_timestamps_monotone():
+    rt = ClusterRuntime(_workers("disaggregated"), ClusterConfig())
+    rt.submit_trace(make_trace(PoissonProcess(rate=10.0), REASONING, 25,
+                               seed=11, osl_cap=300))
+    m = rt.run()
+    for r in m.finished_requests():
+        assert r.arrival <= r.t_admitted <= r.t_first_token <= r.t_finished
+        if r.decode_times:
+            assert min(r.decode_times) >= r.t_first_token
+
+
+# ------------------------------------------------------------------ policies
+def test_memory_aware_straggler_penalty_is_scalar():
+    """Regression (old tuple-key bug): a slow replica with EQUAL headroom
+    must be avoided — the straggler term must influence the score even when
+    headrooms differ slightly in its favour."""
+    ws = _workers("colocated", n=2)
+    pol = MemoryAware(straggler_penalty=2.0, ewma_alpha=0.2)
+    # equal headroom; replica 0 is 5x slower per step
+    for _ in range(20):
+        pol.note_step(0, 0.050)
+        pol.note_step(1, 0.010)
+    assert pol.pick(ws, 100, 400) == 1
+    # and the penalty folds into ONE scalar: a slightly fuller fast replica
+    # still beats a much slower emptier one
+    ws[1].engine.alloc.grow(999, 16 * 40)      # shrink replica 1's headroom
+    assert pol.pick(ws, 100, 400) == 1
+
+
+def test_dispatcher_least_headroom_best_fit():
+    from repro.cluster.policies import LeastKVHeadroom
+    ws = [make_sim_worker(CFG, PLAN, role="decode", name=f"d{i}",
+                          n_pages=50) for i in range(3)]
+
+    def adopt(w, rid, isl, max_new):
+        r = Request(rid=rid, prompt=[1] * isl, max_new_tokens=max_new)
+        r.prompt_pos = isl
+        assert w.engine.inject(r)
+    # d0 nearly full (headroom 11 pages), d1 lighter (36), d2 empty (50)
+    adopt(ws[0], 1, 600, 10)
+    adopt(ws[1], 2, 200, 10)
+    cand = Request(rid=77, prompt=[1] * 200, max_new_tokens=100)
+    cand.prompt_pos = 200
+    cand.generated = 1
+    # candidate needs pages_for(200+99+1) = 19 pages: d0 can't fit;
+    # best fit among {d1, d2} is the fuller d1
+    assert ws[LeastKVHeadroom().pick(ws, cand)].name == "d1"
+
+
+def test_small_prefill_pool_accepts_long_decode_requests():
+    """Regression: validation on a prefill worker must only require the
+    PROMPT to fit (requests migrate out after one token) — a fleet with a
+    small prefill pool and big decode pool serves long-OSL requests."""
+    ws = [make_sim_worker(CFG, PLAN, role="prefill", name="pre",
+                          n_pages=500),          # 8k tokens: < isl + osl
+          make_sim_worker(CFG, PLAN, role="decode", name="dec",
+                          n_pages=3000)]
+    rt = ClusterRuntime(ws, ClusterConfig())
+    rt.submit(isl=2000, osl=5000, arrival=0.0)   # 7k > prefill pool
+    m = rt.run()
+    assert m.summary()["n_finished"] == 1
+    # but an over-prompt request is still rejected up front
+    with pytest.raises(ValueError, match="prefill-pool"):
+        rt.submit(isl=9000, osl=100)
+
+
+def test_cluster_rid_counter_seeded_past_existing_requests():
+    """Regression: joining a cluster must not recycle rids an engine already
+    issued (rids key the allocator tables; collision corrupts page
+    accounting)."""
+    w = make_sim_worker(CFG, PLAN, n_pages=2000)
+    pre = w.engine.submit(100, 50)               # issues rid 0 pre-cluster
+    rt = ClusterRuntime([w], ClusterConfig())
+    rt.submit(100, 50, arrival=0.0)
+    m = rt.run()
+    rids = [r.rid for r in m.finished_requests()]
+    assert len(rids) == 2 and len(set(rids)) == 2
+    assert pre.rid in rids
+
+
+# --------------------------------------------------------------- SLO metrics
+def test_slo_attainment_and_goodput():
+    def mk(ttft, tpot, gen=100):
+        r = Request(rid=0, prompt=[1] * 10, max_new_tokens=gen)
+        r.arrival, r.t_admitted = 0.0, 0.0
+        r.t_first_token = ttft
+        r.generated = gen
+        r.t_finished = ttft + tpot * (gen - 1)
+        return r
+    good = mk(0.5, 0.01)
+    bad_ttft = mk(5.0, 0.01)
+    bad_tpot = mk(0.5, 0.2)
+    slo = SLO(ttft_s=1.0, tpot_s=0.05)
+    assert slo.attained(good) and not slo.attained(bad_ttft) \
+        and not slo.attained(bad_tpot)
+    reqs = [good, bad_ttft, bad_tpot]
+    assert slo_attainment(reqs, slo) == pytest.approx(1 / 3)
+    assert goodput_tok_s(reqs, slo, duration_s=10.0) == pytest.approx(10.0)
+    # unconstrained SLO: everything attains
+    assert slo_attainment(reqs, SLO()) == 1.0
+
+
+def test_cluster_saturation_timeline_reported():
+    ws = _workers("colocated", n=2, n_pages=600, max_seqs=64)
+    rt = ClusterRuntime(ws, ClusterConfig())
+    rt.submit_trace(make_trace(PoissonProcess(rate=50.0), REASONING, 40,
+                               seed=5, osl_cap=500))
+    m = rt.run()
+    s = m.summary(SLO(ttft_s=2.0, tpot_s=0.05))
+    for w in ws:
+        tl = m.saturation_timeline(w)
+        assert tl and all(0.0 <= p["kv_util"] <= 1.0 for p in tl)
+        assert s["workers"][w.name]["peak_kv_util"] > 0.0
+    assert "goodput_tok_s" in s and "slo_attainment" in s

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property-based tests need the 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.models.moe import (_dispatch_indices, moe_ffn, moe_ffn_reference,

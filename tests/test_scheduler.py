@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) for the paged allocator and scheduler
 invariants, plus direct preemption-semantics checks."""
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based tests need the 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.admission import AdmissionPolicy
 from repro.core.kv_cache import PagedAllocator

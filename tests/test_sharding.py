@@ -1,7 +1,10 @@
 """Head-padding and sharding-rule properties (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property-based tests need the 'test' extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.registry import ARCHS, get_config
 from repro.parallel.sharding import (ParallelContext, kv_to_orig,
