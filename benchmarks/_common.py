@@ -1,24 +1,19 @@
 """Shared helpers for the paper-figure benchmarks.
 
 Every benchmark prints ``name,value,derived`` CSV rows (brief format) and
-returns its rows for run.py to aggregate. Engine-dynamics benchmarks run the
-REAL scheduler/allocator under the virtual-clock SimRunner with H200
-constants (the paper's testbed); parallelism benchmarks use the planner's
-analytical model. Workloads are scaled-down Natural-Reasoning samples so the
-whole suite completes on one CPU core in minutes — scaling factors are
-reported in each row's `derived` field.
+returns its rows for run.py to aggregate. Engine-dynamics benchmarks are thin
+``Scenario`` definitions compiled to the virtual-clock engine or cluster
+fidelity (``repro.scenario``) with H200 constants (the paper's testbed);
+parallelism benchmarks use the planner's analytical model. Workloads are
+scaled-down Natural-Reasoning samples so the whole suite completes on one CPU
+core in minutes — scaling factors are reported in each row's `derived` field.
 """
 from __future__ import annotations
 
-import sys
-import time
-from typing import Dict, List, Optional
+from typing import Dict
 
-from repro.configs.base import ModelConfig
-from repro.core import perf_model as pm
-from repro.core.engine import EngineConfig, InferenceEngine
-from repro.core.runner import SimRunner
-from repro.data.reasoning import REASONING, sample
+from repro.core.engine import InferenceEngine
+from repro.scenario import Scenario
 
 
 def emit(name: str, value, derived: str = "") -> Dict:
@@ -26,30 +21,19 @@ def emit(name: str, value, derived: str = "") -> Dict:
     return {"name": name, "value": value, "derived": derived}
 
 
-def sim_engine(cfg: ModelConfig, plan: pm.ParallelismPlan, hw=pm.H200, *,
-               n_pages: Optional[int] = None, max_seqs: int = 256,
-               admission: str = "naive", autotune: bool = False,
-               max_batched_tokens: int = 8192, dtype_bytes: int = 2
-               ) -> InferenceEngine:
-    if n_pages is None:
-        cap = pm.kv_capacity_tokens(cfg, plan, hw, dtype_bytes)
-        n_pages = max(cap // 16, 64)
-    ecfg = EngineConfig(n_pages=n_pages, max_num_seqs=max_seqs,
-                        max_num_batched_tokens=max_batched_tokens,
-                        chunk_size=512, admission_mode=admission,
-                        autotune=autotune)
-    return InferenceEngine(cfg, ecfg,
-                           SimRunner(cfg, plan, hw, dtype_bytes))
-
-
-def reasoning_requests(n: int, osl_cap: int = 2400, seed: int = 0):
-    return [(isl, min(osl, osl_cap)) for isl, osl in
-            sample(REASONING, n, seed=seed)]
-
-
 def run_to_completion(eng: InferenceEngine, reqs, cap_tokens: int = 10 ** 9):
+    """Submit every (isl, osl) at t=0 and drain the engine. OSLs are clamped
+    to ``cap_tokens`` and to what fits the engine's page pool alongside the
+    prompt (the fits-alone invariant)."""
     capacity = eng.alloc.n_pages * eng.alloc.page_size
     for isl, osl in reqs:
-        osl = min(osl, max(capacity - isl - 2, 1))
+        osl = min(osl, cap_tokens, max(capacity - isl - 2, 1))
         eng.submit(int(isl), int(osl), arrival=0.0)
     return eng.run(max_steps=400_000).summary()
+
+
+def run_closed(sc: Scenario, cap_tokens: int = 10 ** 9) -> Dict:
+    """Compile a scenario's representative replica and run its closed-loop
+    trace to completion (the pre-cluster benchmark mode)."""
+    from repro.scenario import requests
+    return run_to_completion(sc.to_engine(), requests(sc), cap_tokens)

@@ -1,37 +1,41 @@
 """Fig 4/5 + Obs 3 — batch-size scaling on an 8-replica DP fleet: aggregate
 throughput grows but E2E grows sub-linearly and the per-replica capacity trap
 persists (DP does not pool memory)."""
-from repro.configs.paper_models import DS_DISTILL_8B
-from repro.core import perf_model as pm
-from repro.core.router import DPRouter, RouterConfig
+import dataclasses
 
-from benchmarks._common import emit, reasoning_requests, sim_engine
+from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
+
+from benchmarks._common import emit
+
+BASE = Scenario(
+    name="batch-scaling",
+    model=ModelRef("ds-distill-8b"),
+    fleet=(WorkerGroup(role="colocated", count=8, admission="naive"),),
+    traffic=Traffic(process="closed", workload="reasoning",
+                    n_requests=125, osl_cap=2400, seed=3),
+    routing="round_robin")
 
 
 def run():
-    cfg = DS_DISTILL_8B
-    plan = pm.ParallelismPlan()
     rows = []
     for bs in (125, 500, 1250):           # paper: 500/2000/5000 over 8 GPUs
-        replicas = [sim_engine(cfg, plan, max_seqs=256, admission="naive")
-                    for _ in range(8)]
-        router = DPRouter(replicas, RouterConfig(policy="round_robin"))
-        cap = replicas[0].alloc.n_pages * 16
-        for isl, osl in reasoning_requests(bs, seed=3):
-            router.submit(int(isl), int(min(osl, cap - isl - 2)), arrival=0.0)
-        router.run_all(max_steps=400_000)
-        sums = [e.metrics.summary() for e in replicas]
-        tput = sum(s["gen_throughput_tok_s"] for s in sums)
-        e2e = max(s["e2e_s"]["p50"] for s in sums)
-        pre = sum(s["preemptions"] for s in sums)
+        sc = dataclasses.replace(
+            BASE, name=f"batch-scaling-bs{bs}",
+            traffic=dataclasses.replace(BASE.traffic, n_requests=bs))
+        rt = sc.to_cluster()
+        rt.submit_trace(sc.trace())
+        m = rt.run(max_steps=3_200_000)
+        s = m.summary()
+        e2e = m.request_summary()["e2e_s"]["p50"]
+        pre = sum(v["preemptions"] for v in s["workers"].values())
+        peak = max(v["peak_kv_util"] for v in s["workers"].values())
         scale = "8xH200;DP=8;sim;bs scaled /4 vs paper"
         rows.append(emit(f"batch_scaling/agg_tput_tok_s/bs={bs}",
-                         round(tput, 0), scale))
+                         round(s["throughput_tok_s"], 0), scale))
         rows.append(emit(f"batch_scaling/e2e_p50_s/bs={bs}", round(e2e, 1),
                          scale))
         rows.append(emit(f"batch_scaling/preemptions/bs={bs}", pre, scale))
-        rows.append(emit(f"batch_scaling/peak_kv/bs={bs}",
-                         round(max(s['peak_kv_util'] for s in sums), 3),
+        rows.append(emit(f"batch_scaling/peak_kv/bs={bs}", round(peak, 3),
                          scale))
     return rows
 

@@ -1,21 +1,29 @@
 """Fig 2 + Obs 1 — the Capacity Trap: concurrency sweep for DS-8B on one
 H200. Throughput rises with concurrency only until KV saturates; past that,
-preemption storms collapse it."""
-from repro.configs.paper_models import DS_DISTILL_8B
-from repro.core import perf_model as pm
+preemption storms collapse it. Each sweep point is the same Scenario with a
+different per-replica concurrency cap."""
+import dataclasses
 
-from benchmarks._common import emit, reasoning_requests, run_to_completion, \
-    sim_engine
+from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
+
+from benchmarks._common import emit, run_closed
+
+BASE = Scenario(
+    name="capacity-trap",
+    model=ModelRef("ds-distill-8b"),
+    fleet=(WorkerGroup(role="colocated", count=1, admission="naive"),),
+    traffic=Traffic(process="closed", workload="reasoning",
+                    n_requests=400, osl_cap=8000, seed=1))
 
 
 def run(n_requests: int = 400):
-    cfg = DS_DISTILL_8B
-    plan = pm.ParallelismPlan()
-    reqs = reasoning_requests(n_requests, osl_cap=8000, seed=1)
     rows = []
     for max_seqs in (64, 256, 1024, 2048):
-        eng = sim_engine(cfg, plan, max_seqs=max_seqs, admission="naive")
-        s = run_to_completion(eng, reqs)
+        sc = dataclasses.replace(
+            BASE, name=f"capacity-trap-seqs{max_seqs}",
+            fleet=(dataclasses.replace(BASE.fleet[0], max_seqs=max_seqs),),
+            traffic=dataclasses.replace(BASE.traffic, n_requests=n_requests))
+        s = run_closed(sc)
         scale = f"n={n_requests};1xH200;sim"
         rows.append(emit(f"capacity_trap/tput_tok_s/seqs={max_seqs}",
                          round(s["gen_throughput_tok_s"], 1), scale))

@@ -1,10 +1,9 @@
 """Colocated-DP vs disaggregated prefill/decode under rising open-loop load.
 
-The serving-level experiment the cluster layer exists for: a 4xH200 DS-8B
-fleet serves a long-context reasoning trace (Poisson arrivals) either as
-4 colocated DP replicas or as 1 prefill + 3 decode workers with modeled
-KV-transfer migration. SLO-goodput (tokens/s inside TTFT+TPOT targets)
-exhibits the phase-divergence crossover:
+The serving-level experiment the cluster layer exists for: the registry's
+`ds8b-4xh200-colocated` / `ds8b-4xh200-disagg` scenario pair replayed over a
+Poisson rate sweep (same trace both modes at each rate). SLO-goodput
+(tokens/s inside TTFT+TPOT targets) exhibits the phase-divergence crossover:
 
   * low rate    — colocated wins: 4 decode-capable engines beat 3, and the
                   migration transfer buys nothing when prefill interference
@@ -18,35 +17,16 @@ exhibits the phase-divergence crossover:
 Also emits per-replica KV-saturation timelines (the Obs 4 claim: the fleet
 tail follows the FIRST replica to saturate).
 """
-from repro.configs.paper_models import DS_DISTILL_8B
-from repro.core import perf_model as pm
-from repro.core.metrics import SLO
-from repro.cluster import (ClusterConfig, ClusterRuntime, PoissonProcess,
-                           make_trace, make_sim_worker)
-from repro.data.reasoning import LONG_REASONING
+import dataclasses
+
+from repro.scenario import get_scenario
 
 from benchmarks._common import emit
 
-N_PAGES = 3000          # 48k KV tokens/worker: saturates at paper-like scale
-MAX_SEQS = 64
 N_REQUESTS = 150
-OSL_CAP = 1200
 RATES = (1, 2, 4, 8, 12, 16, 20)
-TTFT_SLO_S = 0.5
-TPOT_SLO_S = 0.020      # 50 tok/s streaming floor (interactive reasoning)
-SCALE = f"n={N_REQUESTS};4xH200;sim;ttft<{TTFT_SLO_S};tpot<{TPOT_SLO_S}"
-
-
-def build_fleet(mode: str):
-    cfg, plan = DS_DISTILL_8B, pm.ParallelismPlan()
-    kw = dict(n_pages=N_PAGES, max_seqs=MAX_SEQS)
-    if mode == "colocated":
-        return [make_sim_worker(cfg, plan, role="colocated", name=f"co{i}",
-                                **kw) for i in range(4)]
-    ws = [make_sim_worker(cfg, plan, role="prefill", name="pre0", **kw)]
-    ws += [make_sim_worker(cfg, plan, role="decode", name=f"dec{i}", **kw)
-           for i in range(3)]
-    return ws
+MODES = {"colocated": "ds8b-4xh200-colocated",
+         "disaggregated": "ds8b-4xh200-disagg"}
 
 
 def timeline_digest(points, k: int = 8) -> str:
@@ -58,16 +38,20 @@ def timeline_digest(points, k: int = 8) -> str:
                     for i in idx)
 
 
-def run(n_requests: int = N_REQUESTS):
-    slo = SLO(ttft_s=TTFT_SLO_S, tpot_s=TPOT_SLO_S)
+def run(n_requests: int = N_REQUESTS, rates=RATES):
+    base = get_scenario(MODES["colocated"])
+    slo = base.slo("interactive")
+    scale = (f"n={n_requests};4xH200;sim;"
+             f"ttft<{slo.ttft_s};tpot<{slo.tpot_s}")
     rows = []
     goodput = {}
-    for rate in RATES:
-        trace = make_trace(PoissonProcess(rate=rate), LONG_REASONING,
-                           n_requests, seed=42, osl_cap=OSL_CAP)
-        for mode in ("colocated", "disaggregated"):
-            rt = ClusterRuntime(build_fleet(mode), ClusterConfig())
-            rt.submit_trace(trace)
+    for rate in rates:
+        for mode, name in MODES.items():
+            sc = get_scenario(name)
+            sc = dataclasses.replace(sc, traffic=dataclasses.replace(
+                sc.traffic, rate=float(rate), n_requests=n_requests))
+            rt = sc.to_cluster()
+            rt.submit_trace(sc.trace())
             m = rt.run(max_steps=2_000_000)
             s = m.summary(slo)
             rs = m.request_summary()
@@ -76,20 +60,20 @@ def run(n_requests: int = N_REQUESTS):
             goodput[(mode, rate)] = s["goodput_tok_s"]
             tag = f"{mode}/rate={rate}"
             rows.append(emit(f"disagg_sweep/goodput_tok_s/{tag}",
-                             round(s["goodput_tok_s"], 1), SCALE))
+                             round(s["goodput_tok_s"], 1), scale))
             rows.append(emit(f"disagg_sweep/slo_attainment/{tag}",
-                             round(s["slo_attainment"], 3), SCALE))
+                             round(s["slo_attainment"], 3), scale))
             rows.append(emit(f"disagg_sweep/ttft_p95_s/{tag}",
-                             round(rs["ttft_s"]["p95"], 4), SCALE))
+                             round(rs["ttft_s"]["p95"], 4), scale))
             rows.append(emit(f"disagg_sweep/tpot_p95_s/{tag}",
-                             round(rs["tpot_s"]["p95"], 5), SCALE))
+                             round(rs["tpot_s"]["p95"], 5), scale))
             if s["n_migrations"]:
                 rows.append(emit(f"disagg_sweep/mean_kv_transfer_s/{tag}",
-                                 round(s["mean_transfer_s"], 6), SCALE))
+                                 round(s["mean_transfer_s"], 6), scale))
             first = s["first_saturation_s"]
             rows.append(emit(f"disagg_sweep/first_saturation_s/{tag}",
                              round(first, 2) if first is not None else -1,
-                             SCALE))
+                             scale))
             for w in rt.workers:
                 rows.append(emit(
                     f"disagg_sweep/kv_timeline/{tag}/worker={w.name}",
@@ -97,16 +81,16 @@ def run(n_requests: int = N_REQUESTS):
                     timeline_digest(m.saturation_timeline(w))))
     # the phase-divergence crossover: the lowest rate where disaggregation's
     # SLO-goodput overtakes colocated DP
-    cross = next((r for r in RATES
+    cross = next((r for r in rates
                   if goodput[("disaggregated", r)]
                   > goodput[("colocated", r)] * 1.01), None)
     rows.append(emit("disagg_sweep/crossover_rate_req_s",
-                     cross if cross is not None else -1, SCALE))
-    for r in RATES:
+                     cross if cross is not None else -1, scale))
+    for r in rates:
         rel = goodput[("disaggregated", r)] / max(goodput[("colocated", r)],
                                                   1e-9)
         rows.append(emit(f"disagg_sweep/goodput_ratio_disagg_over_colo/"
-                         f"rate={r}", round(rel, 3), SCALE))
+                         f"rate={r}", round(rel, 3), scale))
     return rows
 
 

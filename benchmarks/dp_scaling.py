@@ -1,33 +1,32 @@
 """Fig 6/8 + Obs 4 — DP scaling: near-linear aggregate throughput for 8B;
-sub-linear for 32B (per-replica capacity trap bites first)."""
-from repro.configs.paper_models import DS_DISTILL_32B, DS_DISTILL_8B
-from repro.core import perf_model as pm
-from repro.core.router import DPRouter, RouterConfig
+sub-linear for 32B (per-replica capacity trap bites first). Each point is one
+Scenario — a colocated fleet of `dp` replicas fed the same closed-loop
+reasoning workload round-robin."""
+from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
 
-from benchmarks._common import emit, reasoning_requests, sim_engine
+from benchmarks._common import emit
 
 
-def _fleet_tput(cfg, dp, n_req, seed):
-    plan = pm.ParallelismPlan()
-    replicas = [sim_engine(cfg, plan, max_seqs=256, admission="naive")
-                for _ in range(dp)]
-    router = DPRouter(replicas, RouterConfig(policy="round_robin"))
-    cap = replicas[0].alloc.n_pages * 16
-    for isl, osl in reasoning_requests(n_req, seed=seed):
-        router.submit(int(isl), int(min(osl, cap - isl - 2)), arrival=0.0)
-    router.run_all(max_steps=400_000)
-    sums = [e.metrics.summary() for e in replicas]
-    toks = sum(s["gen_tokens"] for s in sums)
-    dur = max(s["duration_s"] for s in sums)
-    return toks / dur
+def _fleet_tput(model_name: str, dp: int, n_req: int, seed: int) -> float:
+    sc = Scenario(
+        name=f"dp-scaling-{model_name}-dp{dp}",
+        model=ModelRef(model_name),
+        fleet=(WorkerGroup(role="colocated", count=dp, admission="naive"),),
+        traffic=Traffic(process="closed", workload="reasoning",
+                        n_requests=n_req, osl_cap=2400, seed=seed),
+        routing="round_robin")
+    rt = sc.to_cluster()
+    rt.submit_trace(sc.trace())
+    m = rt.run(max_steps=400_000 * dp)
+    return m.summary()["throughput_tok_s"]
 
 
 def run():
     rows = []
-    for name, cfg in (("8b", DS_DISTILL_8B), ("32b", DS_DISTILL_32B)):
+    for name, model in (("8b", "ds-distill-8b"), ("32b", "ds-distill-32b")):
         base = None
         for dp in (1, 2, 4, 8):
-            t = _fleet_tput(cfg, dp, n_req=60 * dp, seed=4)
+            t = _fleet_tput(model, dp, n_req=60 * dp, seed=4)
             base = base or t
             rows.append(emit(f"dp_scaling/{name}/tput_tok_s/dp={dp}",
                              round(t, 0), "sim;H200"))

@@ -4,8 +4,9 @@ into the *prefill* phase (admission stalls)."""
 from repro.configs.paper_models import DS_DISTILL_8B
 from repro.configs.registry import get_config
 from repro.core import perf_model as pm
+from repro.scenario import ModelRef, Scenario, WorkerGroup
 
-from benchmarks._common import emit, sim_engine
+from benchmarks._common import emit
 
 
 def run():
@@ -28,9 +29,11 @@ def run():
                          f"fits={fits} concurrent reasoning requests"))
 
     # engine-level: the same cliff dynamically (scaled)
-    eng = sim_engine(cfg8, pm.ParallelismPlan(), max_seqs=4096,
-                     admission="naive")
-    capacity = eng.alloc.n_pages * 16
+    eng = Scenario(
+        name="kv-scaling-cliff", model=ModelRef("ds-distill-8b"),
+        fleet=(WorkerGroup(role="colocated", count=1, max_seqs=4096,
+                           admission="naive"),)).to_engine()
+    capacity = eng.alloc.n_pages * eng.alloc.page_size
     big = capacity // 3
     for _ in range(12):
         eng.submit(big // 8, big, arrival=0.0)

@@ -1,22 +1,28 @@
 """Fig 3 + Obs 2 — TTFT/TPOT decoupling and E2E convexity: TTFT falls with
 concurrency (admission), TPOT rises (bandwidth+capacity dilution); E2E has an
 interior sweet spot."""
-from repro.configs.paper_models import DS_DISTILL_8B
-from repro.core import perf_model as pm
+import dataclasses
 
-from benchmarks._common import emit, reasoning_requests, run_to_completion, \
-    sim_engine
+from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
+
+from benchmarks._common import emit, run_closed
+
+BASE = Scenario(
+    name="latency-decoupling",
+    model=ModelRef("ds-distill-8b"),
+    fleet=(WorkerGroup(role="colocated", count=1, admission="naive"),),
+    traffic=Traffic(process="closed", workload="reasoning",
+                    n_requests=400, osl_cap=8000, seed=2))
 
 
 def run(n_requests: int = 400):
-    cfg = DS_DISTILL_8B
-    plan = pm.ParallelismPlan()
-    reqs = reasoning_requests(n_requests, osl_cap=8000, seed=2)
     rows, e2e = [], {}
-    sweep = (48, 192, 768, 2048)
-    for max_seqs in sweep:
-        eng = sim_engine(cfg, plan, max_seqs=max_seqs, admission="naive")
-        s = run_to_completion(eng, reqs)
+    for max_seqs in (48, 192, 768, 2048):
+        sc = dataclasses.replace(
+            BASE, name=f"latency-decoupling-seqs{max_seqs}",
+            fleet=(dataclasses.replace(BASE.fleet[0], max_seqs=max_seqs),),
+            traffic=dataclasses.replace(BASE.traffic, n_requests=n_requests))
+        s = run_closed(sc)
         scale = f"n={n_requests};1xH200;sim"
         rows.append(emit(f"latency/ttft_p50_s/seqs={max_seqs}",
                          round(s["ttft_s"]["p50"], 2), scale))

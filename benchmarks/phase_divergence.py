@@ -1,28 +1,33 @@
 """Fig 12/13 + Obs 7 — prefill vs decode resource divergence, from the
 analytical model (H200) AND measured from the compiled dry-run artifacts
 (v5e): prefill compute-bound, decode memory-bound; arithmetic intensity
-collapse."""
+collapse. The model/hardware/plan point comes from one resolved Scenario."""
 import glob
 import json
 
-from repro.configs.paper_models import DS_DISTILL_8B
-from repro.configs.registry import get_config
 from repro.core import perf_model as pm
+from repro.scenario import ModelRef, Scenario, WorkerGroup, resolve
 
 from benchmarks._common import emit
+
+SC = Scenario(
+    name="phase-divergence",
+    model=ModelRef("ds-distill-8b"),
+    fleet=(WorkerGroup(role="colocated", count=1),))
 
 
 def run():
     rows = []
-    cfg = DS_DISTILL_8B
-    plan = pm.ParallelismPlan()
+    r = resolve(SC)
+    cfg, g = r.model, r.groups[0]
+    plan, hw = g.plan, g.hardware
     for toks in (512, 2048, 8192):
-        p = pm.prefill_step_time(cfg, toks, plan, pm.H200)
+        p = pm.prefill_step_time(cfg, toks, plan, hw)
         rows.append(emit(f"phase/prefill/compute_over_memory/toks={toks}",
                          round(p["compute"] / max(p["memory"], 1e-12), 2),
                          "(>1 => compute-bound prefill)"))
     for batch in (32, 128, 512):
-        d = pm.decode_step_time(cfg, batch, 3500, plan, pm.H200)
+        d = pm.decode_step_time(cfg, batch, 3500, plan, hw)
         rows.append(emit(f"phase/decode/memory_over_compute/batch={batch}",
                          round(d["memory"] / max(d["compute"], 1e-12), 1),
                          "(>1 => bandwidth-bound decode)"))

@@ -1,47 +1,32 @@
-"""Cluster serving demo: one fleet, two architectures.
+"""Cluster serving demo: one scenario pair, two fleet shapes.
 
-Replays the same open-loop Natural-Reasoning trace through (a) 4 colocated
-DP replicas and (b) a disaggregated 1-prefill + 3-decode fleet with modeled
-KV-transfer migration, and prints the SLO-goodput comparison plus each
-replica's KV-saturation trajectory.
+Replays the registry's `ds8b-4xh200-colocated` / `ds8b-4xh200-disagg`
+scenarios — identical model, devices, traffic and SLO; only the fleet shape
+differs — and prints the SLO-goodput comparison plus each replica's
+KV-saturation trajectory. Fleets are built exclusively by
+``Scenario.to_cluster()``.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
-from repro.configs.paper_models import DS_DISTILL_8B
-from repro.core import perf_model as pm
-from repro.core.metrics import SLO
-from repro.cluster import (ClusterConfig, ClusterRuntime, PoissonProcess,
-                           make_trace, make_sim_worker)
-from repro.data.reasoning import LONG_REASONING
+from repro.scenario import get_scenario
 
-RATE = 12.0          # req/s — past the colocated fleet's capacity knee
-N = 150
-SLO_TARGET = SLO(ttft_s=0.5, tpot_s=0.020)
-
-
-def build(mode: str):
-    cfg, plan = DS_DISTILL_8B, pm.ParallelismPlan()
-    kw = dict(n_pages=3000, max_seqs=64)
-    if mode == "colocated":
-        ws = [make_sim_worker(cfg, plan, role="colocated", name=f"co{i}",
-                              **kw) for i in range(4)]
-    else:
-        ws = [make_sim_worker(cfg, plan, role="prefill", name="pre0", **kw)]
-        ws += [make_sim_worker(cfg, plan, role="decode", name=f"dec{i}",
-                               **kw) for i in range(3)]
-    return ClusterRuntime(ws, ClusterConfig())
+PAIR = ("ds8b-4xh200-colocated", "ds8b-4xh200-disagg")
 
 
 def main():
-    trace = make_trace(PoissonProcess(rate=RATE), LONG_REASONING, N,
-                       seed=42, osl_cap=1200)
-    print(f"== {N} long-context reasoning requests, Poisson {RATE:.0f} req/s,"
-          f" DS-8B on 4xH200 (sim) ==")
-    for mode in ("colocated", "disaggregated"):
-        rt = build(mode)
+    base = get_scenario(PAIR[0])
+    trace = base.trace()          # same trace for both fleets (same seed)
+    slo = base.slo("interactive")
+    print(f"== {base.traffic.n_requests} long-context reasoning requests, "
+          f"Poisson {base.traffic.rate:.0f} req/s, {base.model.name} on "
+          f"{base.n_devices}xH200 (sim) ==")
+    for name in PAIR:
+        sc = get_scenario(name)
+        mode = "disaggregated" if sc.disaggregated else "colocated"
+        rt = sc.to_cluster()
         rt.submit_trace(trace)
         m = rt.run()
-        s = m.summary(SLO_TARGET)
+        s = m.summary(slo)
         r = m.request_summary()
         print(f"\n[{mode}] finished={s['n_finished']} "
               f"goodput={s['goodput_tok_s']:.0f}tok/s "
@@ -51,9 +36,10 @@ def main():
               f"tpot p95={r['tpot_s']['p95']*1e3:.1f}ms "
               f"migrations={s['n_migrations']} "
               f"(mean transfer {s['mean_transfer_s']*1e3:.2f}ms)")
-        for name, w in s["workers"].items():
+        for wname, w in s["workers"].items():
             sat = w["time_to_saturation_s"]
-            print(f"  {name:6s} [{w['role']:9s}] peak_kv={w['peak_kv_util']:.2f} "
+            print(f"  {wname:6s} [{w['role']:9s}] "
+                  f"peak_kv={w['peak_kv_util']:.2f} "
                   f"preempt={w['preemptions']:3d} "
                   + (f"saturated@{sat:.1f}s" if sat is not None
                      else "never saturated"))

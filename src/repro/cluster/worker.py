@@ -94,27 +94,44 @@ class Worker:
         return self.engine.alloc.pages_for(prompt_len + future + 1)
 
 
+def default_admission(role: str) -> str:
+    """Prefill workers admit naively (their requests never grow KV —
+    predicting decode growth there would starve the pool), everyone else
+    uses KV-aware admission (Obs 1/8)."""
+    return "naive" if role == "prefill" else "kv_aware"
+
+
+def default_n_pages(cfg: ModelConfig, plan: pm.ParallelismPlan,
+                    hw: pm.Hardware, dtype_bytes: int = 2,
+                    page_size: int = 16, cache_dtype_bytes: int = 2) -> int:
+    """Paper-calibrated page pool: every KV token that fits after weights +
+    runtime overhead. The single source of capacity truth shared by
+    `make_sim_worker` and the Scenario compilers."""
+    cap = pm.kv_capacity_tokens(cfg, plan, hw, dtype_bytes,
+                                cache_dtype_bytes=cache_dtype_bytes)
+    return max(cap // page_size, 64)
+
+
 def make_sim_worker(cfg: ModelConfig, plan: pm.ParallelismPlan,
                     hw: pm.Hardware = pm.H200, *, role: str = "colocated",
                     name: str = "", n_pages: Optional[int] = None,
-                    max_seqs: int = 256, max_batched_tokens: int = 8192,
+                    page_size: int = 16, max_seqs: int = 256,
+                    max_batched_tokens: int = 8192,
                     chunk_size: int = 512, admission: Optional[str] = None,
-                    dtype_bytes: int = 2, rid_source=None) -> Worker:
-    """Virtual-clock worker with paper-calibrated capacity defaults.
-
-    Admission defaults: prefill workers admit naively (their requests never
-    grow KV — predicting decode growth there would starve the pool), others
-    use KV-aware admission.
-    """
+                    autotune: bool = False, dtype_bytes: int = 2,
+                    cache_dtype_bytes: int = 2, rid_source=None) -> Worker:
+    """Virtual-clock worker with paper-calibrated capacity and role-default
+    admission (see `default_n_pages` / `default_admission`)."""
     if n_pages is None:
-        cap = pm.kv_capacity_tokens(cfg, plan, hw, dtype_bytes)
-        n_pages = max(cap // 16, 64)
+        n_pages = default_n_pages(cfg, plan, hw, dtype_bytes, page_size,
+                                  cache_dtype_bytes)
     if admission is None:
-        admission = "naive" if role == "prefill" else "kv_aware"
-    ecfg = EngineConfig(n_pages=n_pages, max_num_seqs=max_seqs,
+        admission = default_admission(role)
+    ecfg = EngineConfig(n_pages=n_pages, page_size=page_size,
+                        max_num_seqs=max_seqs,
                         max_num_batched_tokens=max_batched_tokens,
                         chunk_size=chunk_size, admission_mode=admission,
-                        prefill_only=role == "prefill")
+                        autotune=autotune, prefill_only=role == "prefill")
     eng = InferenceEngine(cfg, ecfg, SimRunner(cfg, plan, hw, dtype_bytes),
                           rid_source=rid_source)
     return Worker(engine=eng, role=role, name=name)

@@ -57,14 +57,20 @@ def candidate_plans(n_devices: int) -> List[pm.ParallelismPlan]:
 
 def estimate(cfg: ModelConfig, plan: pm.ParallelismPlan, hw: pm.Hardware,
              wl: Workload, dtype_bytes: int = 2,
-             cache_dtype_bytes: int = 2) -> PlanEstimate:
+             cache_dtype_bytes: int = 2,
+             kv_cap_tokens: Optional[int] = None) -> PlanEstimate:
+    """Rank one plan. ``kv_cap_tokens`` pins the per-replica KV pool to an
+    externally chosen size (a Scenario's explicit ``n_pages``) instead of the
+    hardware-derived capacity — the engine and planner fidelities then reason
+    about the same pool."""
     shard = plan.tp * plan.pp
     w_per_dev = pm.weight_bytes(cfg, dtype_bytes) / shard
     if w_per_dev > hw.hbm_cap * 0.95:
         return PlanEstimate(plan, False,
                             reason=f"weights {w_per_dev/1e9:.0f}GB/dev > HBM")
-    cap = pm.kv_capacity_tokens(cfg, plan, hw, dtype_bytes,
-                                cache_dtype_bytes=cache_dtype_bytes)
+    cap = kv_cap_tokens if kv_cap_tokens is not None \
+        else pm.kv_capacity_tokens(cfg, plan, hw, dtype_bytes,
+                                   cache_dtype_bytes=cache_dtype_bytes)
     mean_ctx = wl.mean_isl + wl.mean_osl / 2
     conc = int(min(cap / max(mean_ctx, 1), wl.max_num_seqs))
     if conc < 1:
@@ -95,10 +101,12 @@ def estimate(cfg: ModelConfig, plan: pm.ParallelismPlan, hw: pm.Hardware,
 
 
 def plan(cfg: ModelConfig, hw: pm.Hardware, n_devices: int,
-         wl: Optional[Workload] = None, dtype_bytes: int = 2
-         ) -> List[PlanEstimate]:
+         wl: Optional[Workload] = None, dtype_bytes: int = 2,
+         cache_dtype_bytes: int = 2,
+         kv_cap_tokens: Optional[int] = None) -> List[PlanEstimate]:
     wl = wl or Workload()
-    ests = [estimate(cfg, p, hw, wl, dtype_bytes)
+    ests = [estimate(cfg, p, hw, wl, dtype_bytes, cache_dtype_bytes,
+                     kv_cap_tokens)
             for p in candidate_plans(n_devices)]
     return sorted(ests, key=lambda e: (not e.feasible, e.completion_s))
 

@@ -33,7 +33,6 @@ def build_ctx(mesh, multi_pod: bool, cfg: ModelConfig, shape: ShapeSpec,
     overrides.update(opts.get("rules_override", {}))
     kv_dt = opts.get("kv_cache_dtype")
     if isinstance(kv_dt, str):
-        import jax.numpy as jnp
         kv_dt = {"int8": jnp.int8, "bf16": jnp.bfloat16,
                  "fp8": jnp.float8_e4m3fn}[kv_dt]
     return ParallelContext(
@@ -65,7 +64,6 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: ParallelContext,
     mesh = ctx.mesh
     B = shape.global_batch
     s_tok, s_pre = _tok_lens(cfg, shape)
-    bspec = ctx.spec("batch")[0] if True else None
     tok_sh = NamedSharding(mesh, ctx.spec("batch", None))
 
     if shape.kind == "train":

@@ -1,0 +1,29 @@
+"""Unified Scenario API: one declarative spec, three fidelities.
+
+    sc = get_scenario("ds32b-8xh200-dp4tp2")
+    sc.to_plan()      # ranked analytical PlanEstimates (seconds)
+    sc.to_engine()    # one virtual-clock InferenceEngine replica
+    sc.to_cluster()   # the full ClusterRuntime fleet
+
+See docs/scenario.md for the spec schema and walkthrough.
+"""
+from repro.scenario.compile import (Resolved, ResolvedGroup, aggregate_plan,
+                                    estimate_fleet, planner_workload,
+                                    requests, resolve, to_cluster, to_engine,
+                                    to_plan, trace)
+from repro.scenario.registry import (SCENARIOS, get_scenario,
+                                     register_scenario, variant)
+from repro.scenario.spec import (HARDWARE, PROCESSES, ROLES, WORKLOADS,
+                                 ModelRef, Scenario, SLOClass, Traffic,
+                                 WorkerGroup, register_hardware,
+                                 register_workload)
+
+__all__ = [
+    "Scenario", "ModelRef", "WorkerGroup", "Traffic", "SLOClass",
+    "HARDWARE", "WORKLOADS", "ROLES", "PROCESSES",
+    "register_hardware", "register_workload",
+    "Resolved", "ResolvedGroup", "resolve", "aggregate_plan",
+    "estimate_fleet", "planner_workload", "trace", "requests",
+    "to_plan", "to_engine", "to_cluster",
+    "SCENARIOS", "get_scenario", "register_scenario", "variant",
+]

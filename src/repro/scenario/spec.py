@@ -1,0 +1,242 @@
+"""Declarative serving scenarios — the paper's decision framework as an API.
+
+A ``Scenario`` is one frozen, dict/JSON-round-trippable answer to "what am I
+deploying, on what, under which traffic, against which SLOs?". The same spec
+compiles to three fidelities (``repro.scenario.compile``):
+
+  * ``to_plan()``    — ranked analytical ``PlanEstimate``s (seconds to run)
+  * ``to_engine()``  — one virtual-clock ``InferenceEngine`` replica (minutes)
+  * ``to_cluster()`` — a full ``ClusterRuntime`` fleet with routing, arrival
+                       replay and migration (the serving-level ground truth)
+
+so a what-if question ("Qwen-32B on 8xH200 at 12 req/s with interactive
+SLOs — DP4xTP2 or disagg?") is asked once and answered at increasing cost.
+Per-``WorkerGroup`` hardware makes heterogeneous fleets expressible (ROADMAP);
+the ``slos`` tuple is the hook for multi-tenant SLO classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.cluster.worker import ROLES
+from repro.core import perf_model as pm
+from repro.core.metrics import SLO
+from repro.data.reasoning import CHAT, LONG_REASONING, REASONING, WorkloadSpec
+
+# --------------------------------------------------------------- name tables
+# Mutable registries so downstream code can add hardware / workload profiles
+# without touching the spec schema; specs stay JSON-serialisable names.
+HARDWARE: Dict[str, pm.Hardware] = {"h200": pm.H200, "v5e": pm.V5E}
+WORKLOADS: Dict[str, WorkloadSpec] = {
+    "reasoning": REASONING,
+    "chat": CHAT,
+    "long_reasoning": LONG_REASONING,
+}
+
+PROCESSES = ("closed", "poisson", "gamma", "trace")
+
+
+def register_hardware(name: str, hw: pm.Hardware):
+    HARDWARE[name] = hw
+
+
+def register_workload(name: str, spec: WorkloadSpec):
+    WORKLOADS[name] = spec
+
+
+def _lookup(table: Dict[str, Any], name: str, kind: str):
+    try:
+        return table[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown {kind} {name!r} (have {sorted(table)})") from None
+
+
+# -------------------------------------------------------------------- pieces
+@dataclasses.dataclass(frozen=True)
+class ModelRef:
+    """A model by registry name plus its numeric formats."""
+    name: str
+    dtype_bytes: int = 2          # weight/activation width (fp8: 1)
+    cache_dtype_bytes: int = 2    # KV-cache width (fp8/int8 cache: 1)
+
+    def resolve(self):
+        from repro.configs.registry import get_config
+        return get_config(self.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerGroup:
+    """``count`` identical workers sharing one role, hardware and plan.
+
+    ``n_pages=None`` means paper-calibrated capacity: every KV token that
+    fits after weights + runtime overhead (``pm.kv_capacity_tokens``).
+    ``admission=None`` means the role default (prefill workers admit naively
+    — their requests never grow KV; everyone else KV-aware, Obs 1/8).
+    """
+    role: str = "colocated"
+    count: int = 1
+    hardware: str = "h200"
+    plan: pm.ParallelismPlan = pm.ParallelismPlan()
+    n_pages: Optional[int] = None
+    page_size: int = 16
+    max_seqs: int = 256
+    max_batched_tokens: int = 8192
+    chunk_size: int = 512
+    admission: Optional[str] = None
+    autotune: bool = False
+    prefix: str = ""              # worker-name prefix (defaults to role)
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown role {self.role!r} (have {ROLES})")
+        if self.count < 1:
+            raise ValueError(f"group needs count >= 1, got {self.count}")
+        if not isinstance(self.plan, pm.ParallelismPlan):
+            object.__setattr__(self, "plan", pm.ParallelismPlan(**self.plan))
+
+    @property
+    def devices(self) -> int:
+        return self.count * self.plan.devices
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Arrival process x (ISL, OSL) distribution (paper §III-B).
+
+    ``closed`` submits everything at t=0 (the pre-cluster benchmark mode);
+    ``poisson``/``gamma`` are open-loop; ``trace`` replays explicit arrival
+    times. The same ``seed`` always draws the same request lengths, so fleets
+    compared under different processes see identical work.
+    """
+    process: str = "closed"
+    rate: float = 0.0             # req/s (poisson | gamma)
+    cv: float = 2.0               # gamma burstiness (cv=1 is Poisson)
+    arrivals: Tuple[float, ...] = ()   # explicit times (trace)
+    workload: str = "reasoning"
+    n_requests: int = 150
+    osl_cap: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.process not in PROCESSES:
+            raise ValueError(
+                f"unknown arrival process {self.process!r} (have {PROCESSES})")
+        if self.process in ("poisson", "gamma") and self.rate <= 0:
+            raise ValueError(f"{self.process} traffic needs rate > 0")
+        object.__setattr__(self, "arrivals", tuple(self.arrivals))
+        if self.process == "trace" and len(self.arrivals) < self.n_requests:
+            raise ValueError(f"trace has {len(self.arrivals)} arrivals, "
+                             f"need {self.n_requests}")
+
+    def workload_spec(self) -> WorkloadSpec:
+        return _lookup(WORKLOADS, self.workload, "workload")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A named latency contract (the multi-tenant hook: interactive vs batch).
+    ``None`` targets are unconstrained."""
+    name: str = "interactive"
+    ttft_s: Optional[float] = None
+    tpot_s: Optional[float] = None
+
+    def slo(self) -> SLO:
+        return SLO(ttft_s=self.ttft_s, tpot_s=self.tpot_s)
+
+
+# ------------------------------------------------------------------ scenario
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    model: ModelRef
+    fleet: Tuple[WorkerGroup, ...]
+    traffic: Traffic = Traffic()
+    slos: Tuple[SLOClass, ...] = ()
+    routing: str = "memory_aware"        # RoutingPolicy name
+    dispatch: str = "least_headroom"     # DispatchPolicy name
+    transfer_dtype_bytes: int = 2        # KV wire format for migration
+    notes: str = ""
+
+    def __post_init__(self):
+        if isinstance(self.model, dict):
+            object.__setattr__(self, "model", ModelRef(**self.model))
+        fleet = tuple(g if isinstance(g, WorkerGroup) else WorkerGroup(**g)
+                      for g in self.fleet)
+        slos = tuple(s if isinstance(s, SLOClass) else SLOClass(**s)
+                     for s in self.slos)
+        object.__setattr__(self, "fleet", fleet)
+        object.__setattr__(self, "slos", slos)
+        if not self.fleet:
+            raise ValueError("scenario needs at least one worker group")
+        roles = {g.role for g in self.fleet}
+        if "prefill" in roles and "decode" not in roles:
+            raise ValueError("prefill groups need a decode group to "
+                             "migrate into")
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n_devices(self) -> int:
+        return sum(g.devices for g in self.fleet)
+
+    @property
+    def disaggregated(self) -> bool:
+        return any(g.role == "prefill" for g in self.fleet)
+
+    def slo(self, name: Optional[str] = None) -> Optional[SLO]:
+        """The named SLO class (default: the first one) as a core SLO."""
+        if not self.slos:
+            return None
+        if name is None:
+            return self.slos[0].slo()
+        for c in self.slos:
+            if c.name == name:
+                return c.slo()
+        raise KeyError(f"no SLO class {name!r} in scenario {self.name!r} "
+                       f"(have {[c.name for c in self.slos]})")
+
+    # ------------------------------------------------- dict/JSON round trip
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Scenario":
+        d = dict(d)
+        d["model"] = ModelRef(**d["model"])
+        d["fleet"] = tuple(WorkerGroup(**g) for g in d["fleet"])
+        d["traffic"] = Traffic(**d.get("traffic", {}))
+        d["slos"] = tuple(SLOClass(**s) for s in d.get("slos", ()))
+        return cls(**d)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+    # ------------------------------------------------------------ compilers
+    # Thin delegates so a spec in hand is one call away from any fidelity
+    # (the real work — one shared resolution pass — lives in
+    # repro.scenario.compile).
+    def resolve(self):
+        from repro.scenario.compile import resolve
+        return resolve(self)
+
+    def to_plan(self, n_devices: Optional[int] = None):
+        from repro.scenario.compile import to_plan
+        return to_plan(self, n_devices=n_devices)
+
+    def to_engine(self, group: int = 0):
+        from repro.scenario.compile import to_engine
+        return to_engine(self, group=group)
+
+    def to_cluster(self):
+        from repro.scenario.compile import to_cluster
+        return to_cluster(self)
+
+    def trace(self):
+        from repro.scenario.compile import trace
+        return trace(self)

@@ -1,0 +1,197 @@
+"""Scenario API: spec round-trips, cross-fidelity consistency, registry."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import perf_model as pm
+from repro.scenario import (SCENARIOS, ModelRef, Scenario, SLOClass, Traffic,
+                            WorkerGroup, estimate_fleet, get_scenario,
+                            planner_workload, requests, resolve, trace)
+
+
+def _rich_scenario() -> Scenario:
+    """Exercises every schema feature: heterogeneous fleet, gamma traffic,
+    two SLO classes, non-default numerics."""
+    return Scenario(
+        name="rich",
+        model=ModelRef("ds-distill-32b", dtype_bytes=1, cache_dtype_bytes=1),
+        fleet=(WorkerGroup(role="prefill", count=1, hardware="h200",
+                           plan=pm.ParallelismPlan(tp=2, ep=2),
+                           n_pages=2048, max_seqs=32, prefix="pre"),
+               WorkerGroup(role="decode", count=3, hardware="v5e",
+                           plan=pm.ParallelismPlan(tp=4, ep=4),
+                           chunk_size=256, admission="kv_aware")),
+        traffic=Traffic(process="gamma", rate=6.0, cv=2.5,
+                        workload="long_reasoning", n_requests=64,
+                        osl_cap=2000, seed=7),
+        slos=(SLOClass("interactive", ttft_s=0.5, tpot_s=0.02),
+              SLOClass("batch", ttft_s=30.0)),
+        routing="jsq", dispatch="most_headroom", transfer_dtype_bytes=1,
+        notes="round-trip fixture")
+
+
+# ------------------------------------------------------------- dict round trip
+def test_dict_round_trip():
+    for sc in [_rich_scenario(), *SCENARIOS.values()]:
+        assert Scenario.from_dict(sc.to_dict()) == sc
+
+
+def test_json_round_trip_through_plain_data():
+    sc = _rich_scenario()
+    # a full json dump/load turns tuples into lists; from_dict must normalise
+    back = Scenario.from_json(json.dumps(json.loads(sc.to_json())))
+    assert back == sc
+    assert isinstance(back.fleet, tuple)
+    assert isinstance(back.traffic.arrivals, tuple)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        WorkerGroup(role="oracle")
+    with pytest.raises(ValueError):
+        WorkerGroup(count=0)
+    with pytest.raises(ValueError):
+        Traffic(process="poisson", rate=0.0)
+    with pytest.raises(ValueError):
+        Traffic(process="fifo")
+    with pytest.raises(ValueError):      # prefill without a decode pool
+        Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                 fleet=(WorkerGroup(role="prefill"),))
+    with pytest.raises(KeyError):
+        resolve(Scenario(name="x", model=ModelRef("no-such-model"),
+                         fleet=(WorkerGroup(),)))
+    with pytest.raises(KeyError):
+        resolve(Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                         fleet=(WorkerGroup(hardware="h9000"),)))
+
+
+# ---------------------------------------------------------------------- trace
+def test_closed_traffic_arrives_at_zero_and_is_deterministic():
+    sc = Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                  fleet=(WorkerGroup(),),
+                  traffic=Traffic(process="closed", n_requests=32,
+                                  osl_cap=500, seed=5))
+    t1, t2 = trace(sc), trace(sc)
+    assert t1 == t2
+    assert all(e.arrival == 0.0 for e in t1)
+    assert all(e.osl <= 500 for e in t1)
+    assert len(t1) == 32
+
+
+def test_lengths_independent_of_arrival_process():
+    kw = dict(workload="reasoning", n_requests=16, osl_cap=800, seed=3)
+    closed = Scenario(name="a", model=ModelRef("ds-distill-8b"),
+                      fleet=(WorkerGroup(),),
+                      traffic=Traffic(process="closed", **kw))
+    poisson = Scenario(name="b", model=ModelRef("ds-distill-8b"),
+                       fleet=(WorkerGroup(),),
+                       traffic=Traffic(process="poisson", rate=4.0, **kw))
+    assert requests(closed) == requests(poisson)
+
+
+# ------------------------------------------------- cross-fidelity consistency
+def test_plan_concurrency_matches_engine_kv_capacity_explicit_pages():
+    sc = Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                  fleet=(WorkerGroup(count=1, n_pages=3000, max_seqs=64),),
+                  traffic=Traffic(process="closed", n_requests=64,
+                                  osl_cap=1200, seed=42))
+    eng = sc.to_engine()
+    cap_engine = eng.alloc.n_pages * eng.alloc.page_size
+    est = estimate_fleet(sc)
+    assert est.kv_capacity_tokens == cap_engine
+    wl = planner_workload(sc)
+    mean_ctx = wl.mean_isl + wl.mean_osl / 2
+    assert est.concurrency == int(min(cap_engine / mean_ctx,
+                                      sc.fleet[0].max_seqs))
+    # the same estimate appears in the ranked sweep (aggregate plan is DP=1)
+    assert any(e.plan == est.plan for e in sc.to_plan())
+
+
+def test_plan_capacity_matches_engine_default_pages_within_one_page():
+    sc = Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                  fleet=(WorkerGroup(count=1),),
+                  traffic=Traffic(process="closed", n_requests=64, seed=0))
+    eng = sc.to_engine()
+    cap_engine = eng.alloc.n_pages * eng.alloc.page_size
+    est = estimate_fleet(sc)
+    assert abs(est.kv_capacity_tokens - cap_engine) <= eng.alloc.page_size
+
+
+def test_estimate_fleet_handles_plans_outside_candidate_sweep():
+    # candidate_plans always emits ep == tp; a custom ep must not crash
+    sc = Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                  fleet=(WorkerGroup(count=2,
+                                     plan=pm.ParallelismPlan(tp=2)),),
+                  traffic=Traffic(process="closed", n_requests=32, seed=0))
+    est = estimate_fleet(sc)
+    assert est.feasible and est.plan.ep == 1
+
+
+def test_planner_fidelity_uses_decode_group_for_disagg():
+    sc = Scenario(
+        name="x", model=ModelRef("ds-distill-8b"),
+        fleet=(WorkerGroup(role="prefill", count=1, max_seqs=8,
+                           n_pages=1000),
+               WorkerGroup(role="decode", count=3, max_seqs=256,
+                           n_pages=3000)),
+        traffic=Traffic(process="closed", n_requests=32, osl_cap=1200,
+                        seed=0))
+    wl = planner_workload(sc)
+    assert wl.max_num_seqs == 256       # decode group, not the prefill cap
+    # and the KV pinning comes from the decode group's page pool
+    est = sc.to_plan()[0]
+    assert est.kv_capacity_tokens == 3000 * 16
+
+
+def test_resolution_is_shared_across_fidelities():
+    sc = get_scenario("ds8b-4xh200-disagg")
+    r = resolve(sc)
+    rt = sc.to_cluster()
+    # per-group page pools in the cluster match the resolved spec
+    by_role = {}
+    for w in rt.workers:
+        by_role.setdefault(w.role, []).append(w.engine.alloc.n_pages)
+    for rg in r.groups:
+        assert by_role[rg.group.role] == [rg.n_pages] * rg.group.count
+    # engine fidelity builds the same replica as the cluster's group 0
+    eng = sc.to_engine(group=0)
+    assert eng.alloc.n_pages == r.groups[0].n_pages
+    assert eng.sched.cfg.prefill_only   # group 0 is the prefill group
+
+
+# ------------------------------------------------------------------- registry
+@pytest.mark.parametrize("name,devices", [
+    ("ds8b-8xh200-dp8", 8), ("ds14b-8xh200-dp8", 8),
+    ("ds32b-8xh200-dp4tp2", 8), ("llama405b-8xh200-tp8", 8),
+    ("r1-8xh200-pp4tp2", 8), ("ds8b-4xh200-colocated", 4),
+    ("ds8b-4xh200-disagg", 4),
+])
+def test_registry_scenarios_resolve_and_plan(name, devices):
+    sc = get_scenario(name)
+    assert sc.n_devices == devices
+    r = resolve(sc)
+    assert r.model.name == sc.model.name
+    if len(sc.fleet) == 1:
+        est = estimate_fleet(sc)
+        assert est.feasible, f"{name}: own fleet infeasible ({est.reason})"
+
+
+def test_registry_unknown_name():
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+# ------------------------------------------------------------ cluster fidelity
+def test_to_cluster_runs_small_disagg_scenario_to_completion():
+    sc = get_scenario("ds8b-4xh200-disagg")
+    sc = dataclasses.replace(sc, traffic=dataclasses.replace(
+        sc.traffic, n_requests=12, rate=20.0))
+    rt = sc.to_cluster()
+    rt.submit_trace(sc.trace())
+    m = rt.run(max_steps=500_000)
+    s = m.summary(sc.slo())
+    assert s["n_finished"] == 12
+    assert s["n_migrations"] == 12      # every request crossed pools
+    names = {w.name for w in rt.workers}
+    assert names == {"pre0", "dec0", "dec1", "dec2"}
