@@ -2,7 +2,8 @@
 prefill/decode pools, pluggable routing, and SLO-goodput accounting."""
 from repro.cluster.arrivals import (ArrivalProcess, GammaProcess,
                                     PoissonProcess, TraceEntry, TraceProcess,
-                                    load_trace, make_trace, save_trace)
+                                    assign_classes, load_trace, make_trace,
+                                    save_trace)
 from repro.cluster.metrics import ClusterMetrics, MigrationRecord
 from repro.cluster.policies import (DispatchPolicy, JoinShortestQueue,
                                     LeastKVHeadroom, MemoryAware,
@@ -13,7 +14,7 @@ from repro.cluster.worker import Worker, make_sim_worker
 
 __all__ = [
     "ArrivalProcess", "PoissonProcess", "GammaProcess", "TraceProcess",
-    "TraceEntry", "make_trace", "save_trace", "load_trace",
+    "TraceEntry", "make_trace", "assign_classes", "save_trace", "load_trace",
     "ClusterMetrics", "MigrationRecord",
     "RoutingPolicy", "RoundRobin", "JoinShortestQueue", "MemoryAware",
     "DispatchPolicy", "LeastKVHeadroom", "MostKVHeadroom",

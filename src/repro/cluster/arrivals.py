@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,6 +31,7 @@ class TraceEntry:
     arrival: float
     isl: int
     osl: int
+    slo_class: str = ""           # multi-tenant tier tag ("" = default class)
 
 
 class ArrivalProcess:
@@ -86,6 +87,26 @@ def make_trace(process: ArrivalProcess, spec: WorkloadSpec, n: int,
             for t, (i, o) in zip(ts, lens)]
 
 
+def assign_classes(trace: List[TraceEntry],
+                   mix: Sequence[Tuple[str, float]],
+                   seed: int = 0) -> List[TraceEntry]:
+    """Deterministically tag each entry with an SLO class drawn from ``mix``
+    (name, weight) pairs — the multi-tenant per-class traffic split. The same
+    seed always produces the same tagging, so class-aware and class-blind
+    fleets compared on one trace see identical per-request tiers."""
+    if not mix:
+        return list(trace)
+    names = [n for n, _ in mix]
+    w = np.asarray([x for _, x in mix], dtype=float)
+    if (w < 0).any() or w.sum() <= 0:
+        raise ValueError(f"class mix weights must be non-negative with a "
+                         f"positive sum: {list(mix)}")
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(len(names), size=len(trace), p=w / w.sum())
+    return [dataclasses.replace(e, slo_class=names[k])
+            for k, e in zip(picks, trace)]
+
+
 def save_trace(path: str, trace: List[TraceEntry]):
     with open(path, "w") as f:
         for e in trace:
@@ -99,5 +120,6 @@ def load_trace(path: str) -> List[TraceEntry]:
             if line.strip():
                 d = json.loads(line)
                 out.append(TraceEntry(float(d["arrival"]), int(d["isl"]),
-                                      int(d["osl"])))
+                                      int(d["osl"]),
+                                      str(d.get("slo_class", ""))))
     return out

@@ -1,13 +1,23 @@
 """Fleet-level metric aggregation: SLO attainment, goodput, and per-replica
 KV-saturation timelines (the paper's serving-level claims — Obs 3/4: the
-fleet's tail is set by the first replica to saturate its KV pool)."""
+fleet's tail is set by the first replica to saturate its KV pool).
+
+Accounting is makespan-honest: the runtime stamps ``t_end`` (the fleet clock
+at drain) so ``duration_s`` covers the whole serving window — not just the
+finished-request span, which shrinks while the tail is still in flight and
+inflates goodput. Submitted-but-unfinished requests count as SLO misses
+("tokens served outside the SLO are throughput, not goodput" — and a request
+that never finished served them outside any SLO). ``summary(slos=...)``
+reports each SLO class against its own targets; per-class goodputs sum to the
+fleet goodput."""
 from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Union
 
-from repro.core.metrics import SLO, goodput_tok_s, slo_attainment
+from repro.core.metrics import (SLO, SLOMap, class_slo_summary,
+                                finished_window_s, latency_stats)
 from repro.core.request import Request
 from repro.cluster.worker import Worker
 
@@ -28,11 +38,19 @@ class MigrationRecord:
 
 
 class ClusterMetrics:
-    """Aggregates per-worker MetricsLog + cluster-level migration records."""
+    """Aggregates per-worker MetricsLog + cluster-level migration records.
 
-    def __init__(self, workers: List[Worker]):
+    ``submitted`` is the runtime's routed-request list (shared by reference,
+    so it tracks the run); ``t_end`` is the fleet makespan the runtime stamps
+    after ``run()``."""
+
+    def __init__(self, workers: List[Worker],
+                 submitted: Optional[List[Request]] = None):
         self.workers = workers
         self.migrations: List[MigrationRecord] = []
+        self.submitted: List[Request] = submitted if submitted is not None \
+            else []
+        self.t_end: Optional[float] = None
 
     # ------------------------------------------------------------- collection
     def note_migration(self, rec: MigrationRecord):
@@ -54,12 +72,34 @@ class ClusterMetrics:
         return None
 
     # -------------------------------------------------------------- summaries
-    def summary(self, slo: Optional[SLO] = None) -> Dict:
-        reqs = self.finished_requests()
-        gen = sum(r.generated for r in reqs)
-        t_end = max((r.t_finished or 0.0 for r in reqs), default=0.0)
+    def _window(self, makespan: Optional[float]):
+        """(duration, horizon): duration from the explicit makespan when one
+        is known — runtime-stamped ``t_end`` or the caller's override —
+        falling back to the finished-only span otherwise (no runtime
+        attached). A known makespan doubles as the horizon for counting
+        unfinished requests as misses."""
+        reqs = self.submitted or self.finished_requests()
+        end = makespan if makespan is not None else self.t_end
+        if end is None:
+            return finished_window_s(reqs), None
         t0 = min((r.arrival for r in reqs), default=0.0)
-        dur = max(t_end - t0, 1e-9)
+        return max(end - t0, 1e-9), end
+
+    def summary(self, slo: Optional[Union[SLO, SLOMap]] = None,
+                slos: Optional[SLOMap] = None,
+                makespan: Optional[float] = None) -> Dict:
+        """Fleet summary. Pass a single ``slo`` or a ``slos`` class map for
+        SLO accounting (a map adds a per-class breakdown under
+        ``"classes"``); ``makespan`` overrides the runtime-stamped fleet
+        clock."""
+        finished = self.finished_requests()
+        all_reqs = self.submitted or finished
+        # served tokens include in-flight requests' partial decodes — the
+        # denominator is the whole serving window, so the numerator must
+        # cover everything served in it (truncated runs would otherwise
+        # understate throughput)
+        gen = sum(r.generated for r in all_reqs)
+        dur, horizon = self._window(makespan)
         per_worker = {}
         for w in self.workers:
             tl = w.engine.metrics.timeline
@@ -74,7 +114,9 @@ class ClusterMetrics:
                 "time_to_saturation_s": sat,
             }
         out = {
-            "n_finished": len(reqs),
+            "n_submitted": len(all_reqs),
+            "n_finished": len(finished),
+            "n_unfinished": len(all_reqs) - len(finished),
             "gen_tokens": gen,
             "duration_s": dur,
             "throughput_tok_s": gen / dur,
@@ -88,26 +130,22 @@ class ClusterMetrics:
                 (v["time_to_saturation_s"] for v in per_worker.values()
                  if v["time_to_saturation_s"] is not None), default=None),
         }
-        if slo is not None:
-            out["slo_attainment"] = slo_attainment(reqs, slo)
-            out["goodput_tok_s"] = goodput_tok_s(reqs, slo, dur)
+        table = slos if slos is not None else slo
+        if table is not None:
+            pool = all_reqs if horizon is not None else finished
+            s = class_slo_summary(pool, table, dur, horizon=horizon)
+            out["slo_attainment"] = s["slo_attainment"]
+            out["goodput_tok_s"] = s["goodput_tok_s"]
+            if isinstance(table, Mapping):
+                out["classes"] = s["classes"]
         return out
 
     def request_summary(self) -> Dict:
         """Latency distributions over all finished requests (fleet-wide)."""
         reqs = self.finished_requests()
-
-        def stats(vals):
-            vals = sorted(v for v in vals if v is not None)
-            if not vals:
-                return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "max": 0.0}
-            return {"mean": statistics.fmean(vals),
-                    "p50": vals[len(vals) // 2],
-                    "p95": vals[min(int(len(vals) * 0.95), len(vals) - 1)],
-                    "max": vals[-1]}
         return {
-            "ttft_s": stats([r.ttft() for r in reqs]),
-            "tpot_s": stats([r.tpot() for r in reqs]),
-            "e2e_s": stats([r.e2e() for r in reqs]),
-            "waiting_s": stats([r.waiting_time() for r in reqs]),
+            "ttft_s": latency_stats([r.ttft() for r in reqs]),
+            "tpot_s": latency_stats([r.tpot() for r in reqs]),
+            "e2e_s": latency_stats([r.e2e() for r in reqs]),
+            "waiting_s": latency_stats([r.waiting_time() for r in reqs]),
         }

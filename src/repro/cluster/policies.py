@@ -48,10 +48,13 @@ def eligible_indices(workers: List[Worker], prompt_len: int,
 
 
 class RoutingPolicy:
-    """Chooses the worker index for a new request."""
+    """Chooses the worker index for a new request. ``urgency`` is the
+    request's SLO-class urgency normalised to [0, 1] (0 = batch/untiered) —
+    class-aware policies may weigh latency risk more heavily for urgent
+    requests; class-blind policies ignore it."""
 
     def pick(self, workers: List[Worker], prompt_len: int,
-             max_new: int) -> int:
+             max_new: int, urgency: float = 0.0) -> int:
         raise NotImplementedError
 
     def note_step(self, i: int, dt: float):
@@ -62,7 +65,7 @@ class RoundRobin(RoutingPolicy):
     def __init__(self):
         self._rr = -1
 
-    def pick(self, workers, prompt_len, max_new):
+    def pick(self, workers, prompt_len, max_new, urgency=0.0):
         ok = set(eligible_indices(workers, prompt_len, max_new))
         for step in range(1, len(workers) + 1):
             i = (self._rr + step) % len(workers)
@@ -73,46 +76,68 @@ class RoundRobin(RoutingPolicy):
 
 
 class JoinShortestQueue(RoutingPolicy):
-    def pick(self, workers, prompt_len, max_new):
+    def pick(self, workers, prompt_len, max_new, urgency=0.0):
         return min(eligible_indices(workers, prompt_len, max_new),
                    key=lambda i: workers[i].queue_depth)
 
 
 @dataclasses.dataclass
 class MemoryAware(RoutingPolicy):
-    """score_i = -headroom_frac_i + straggler_penalty * (lat_i/mean - 1).
+    """score_i = -headroom_frac_i + straggler_penalty * straggle_i
+               + urgency_weight * urgency * queue_frac_i.
 
-    Both terms are dimensionless: headroom as a fraction of the page pool,
-    straggle as relative EWMA step latency. The old implementation kept the
-    straggler term in the second slot of a tuple key, where it only ever
-    broke exact-headroom ties."""
+    All terms are dimensionless: headroom as a fraction of the page pool,
+    straggle as relative EWMA step latency among *observed* workers, queue
+    pressure as occupancy of the concurrency cap. The urgency term makes the
+    router latency-averse for interactive requests (a deep queue is TTFT
+    risk) while batch requests still pack by headroom.
+
+    Straggler accounting only covers workers that have actually stepped:
+    the EWMA list is sized to the pool with ``None`` for unobserved workers,
+    the fleet mean excludes them, and the first observation seeds the EWMA
+    directly. (The old lazily-grown list held 0.0 for never-stepped workers,
+    dragging the mean down — the first active workers were charged a
+    spurious warmup straggler penalty while workers beyond the list length
+    got 0.0 straggle for free.)"""
     straggler_penalty: float = 2.0
     ewma_alpha: float = 0.2
+    urgency_weight: float = 1.0
 
     def __post_init__(self):
-        self._lat_ewma: List[float] = []
+        self._lat_ewma: List[Optional[float]] = []
+
+    def _size_to(self, n: int):
+        while len(self._lat_ewma) < n:
+            self._lat_ewma.append(None)
 
     def note_step(self, i: int, dt: float):
-        while len(self._lat_ewma) <= i:
-            self._lat_ewma.append(0.0)
+        self._size_to(i + 1)
+        prev = self._lat_ewma[i]
         a = self.ewma_alpha
-        self._lat_ewma[i] = (1 - a) * self._lat_ewma[i] + a * dt
+        # first observation seeds the EWMA (no bias toward zero at warmup)
+        self._lat_ewma[i] = dt if prev is None else (1 - a) * prev + a * dt
 
     def _straggle(self, i: int) -> float:
-        if i >= len(self._lat_ewma):
-            return 0.0
-        mean = sum(self._lat_ewma) / len(self._lat_ewma)
+        if i >= len(self._lat_ewma) or self._lat_ewma[i] is None:
+            return 0.0                   # unobserved: no data, no penalty
+        observed = [v for v in self._lat_ewma if v is not None]
+        mean = sum(observed) / len(observed)
         if mean <= 0:
             return 0.0
         return self._lat_ewma[i] / mean - 1.0
 
-    def pick(self, workers, prompt_len, max_new):
+    def pick(self, workers, prompt_len, max_new, urgency=0.0):
+        self._size_to(len(workers))
+
         def score(i):
             w = workers[i]
             head = w.predicted_headroom_pages() \
                 - w.predicted_candidate_pages(prompt_len, max_new)
             frac = head / max(w.engine.alloc.n_pages, 1)
-            return -frac + self.straggler_penalty * self._straggle(i)
+            queue_frac = w.queue_depth / max(w.engine.sched.cfg.max_num_seqs,
+                                             1)
+            return (-frac + self.straggler_penalty * self._straggle(i)
+                    + self.urgency_weight * urgency * queue_frac)
         return min(eligible_indices(workers, prompt_len, max_new), key=score)
 
 
@@ -127,9 +152,11 @@ def make_policy(name: str, **kw) -> RoutingPolicy:
 
 # ---------------------------------------------------------------- dispatchers
 class DispatchPolicy:
-    """Chooses the decode worker that adopts a migrated request."""
+    """Chooses the decode worker that adopts a migrated request. ``urgency``
+    is the request's normalised SLO-class urgency (see RoutingPolicy)."""
 
-    def pick(self, workers: List[Worker], req: Request) -> Optional[int]:
+    def pick(self, workers: List[Worker], req: Request,
+             urgency: float = 0.0) -> Optional[int]:
         raise NotImplementedError
 
 
@@ -138,9 +165,12 @@ class LeastKVHeadroom(DispatchPolicy):
     headroom still fits the request's remaining growth, pick the one with the
     LEAST headroom — packing tight keeps the emptiest replica free for the
     long-decode tail (the requests that actually hit the capacity wall,
-    Obs 4). Falls back to the most-headroom worker when none fits."""
+    Obs 4). Urgent (interactive) requests instead pick the least *loaded*
+    fitting worker — a packed replica's batch depth is TPOT risk, and their
+    short decodes never stress the capacity wall best-fit protects. Falls
+    back to the most-headroom worker when none fits."""
 
-    def pick(self, workers, req):
+    def pick(self, workers, req, urgency=0.0):
         if not workers:
             return None
         need = [None] * len(workers)
@@ -153,6 +183,9 @@ class LeastKVHeadroom(DispatchPolicy):
             if head >= pages:
                 fits.append(i)
         if fits:
+            if urgency > 0.5:
+                return min(fits, key=lambda i: (workers[i].queue_depth,
+                                                need[i]))
             return min(fits, key=lambda i: need[i])
         return max(range(len(workers)), key=lambda i: need[i])
 
@@ -160,7 +193,7 @@ class LeastKVHeadroom(DispatchPolicy):
 class MostKVHeadroom(DispatchPolicy):
     """Worst-fit (load-levelling) decode dispatch: always the emptiest."""
 
-    def pick(self, workers, req):
+    def pick(self, workers, req, urgency=0.0):
         if not workers:
             return None
         return max(range(len(workers)),

@@ -27,9 +27,10 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core import perf_model as pm
+from repro.core.admission import ClassPolicy
 from repro.core.request import Request
 from repro.cluster.arrivals import TraceEntry
 from repro.cluster.metrics import ClusterMetrics, MigrationRecord
@@ -44,6 +45,9 @@ class ClusterConfig:
     dispatcher: Union[str, DispatchPolicy] = "least_headroom"
     transfer_dtype_bytes: int = 2     # KV wire format (fp8 transfer: 1)
     snapshot_every: int = 1
+    # multi-tenant SLO classes: name -> urgency, consulted by routing and
+    # dispatch (per-worker scheduling urgency lives in each EngineConfig)
+    class_priorities: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class ClusterRuntime:
@@ -94,11 +98,19 @@ class ClusterRuntime:
         self._arrivals: List = []          # (t, seq, TraceEntry) min-heap
         self._arr_seq = itertools.count()
         self._migrating: List[dict] = []   # in-flight KV transfers
-        self.metrics = ClusterMetrics(self.workers)
+        self._classes = ClassPolicy(priority=dict(self.cfg.class_priorities))
         self.submitted: List[Request] = []
+        self.metrics = ClusterMetrics(self.workers, submitted=self.submitted)
 
     # ------------------------------------------------------------------- api
-    def submit(self, isl: int, osl: int, arrival: float = 0.0):
+    @property
+    def makespan(self) -> float:
+        """The fleet clock: the latest worker time (the honest goodput
+        denominator — finished-only windows ignore the in-flight tail)."""
+        return max(w.engine.now for w in self.workers)
+
+    def submit(self, isl: int, osl: int, arrival: float = 0.0,
+               slo_class: str = ""):
         from repro.cluster.policies import pool_capacity_tokens
         if self.disaggregated:
             cap = max(pool_capacity_tokens(w) for w in self.decode_pool)
@@ -116,11 +128,11 @@ class ClusterRuntime:
                                  f"largest worker KV capacity {cap}")
         heapq.heappush(self._arrivals,
                        (arrival, next(self._arr_seq),
-                        TraceEntry(arrival, isl, osl)))
+                        TraceEntry(arrival, isl, osl, slo_class)))
 
     def submit_trace(self, trace: Sequence[TraceEntry]):
         for e in trace:
-            self.submit(e.isl, e.osl, e.arrival)
+            self.submit(e.isl, e.osl, e.arrival, slo_class=e.slo_class)
 
     def run(self, max_steps: int = 10 ** 7) -> ClusterMetrics:
         for _ in range(max_steps):
@@ -130,8 +142,12 @@ class ClusterRuntime:
             if w is None:
                 if self._migrating:
                     # decode pool saturated and idle: let the retry clock of
-                    # the earliest transfer pull the fleet forward
+                    # the earliest transfer pull the fleet forward — unless
+                    # an unrouted arrival is the earlier fleet event (the
+                    # work it spawns may land on these idle workers first)
                     t = min(m["ready"] for m in self._migrating)
+                    if self._arrivals and self._arrivals[0][0] < t:
+                        continue                 # routing releases it next
                     for dw in self.decode_pool:
                         if not dw.engine.sched.has_work:
                             dw.engine.advance_to(t)
@@ -152,6 +168,9 @@ class ClusterRuntime:
                                       w.engine.now - t0)
             if w.role == "prefill":
                 self._harvest_prefill_complete(w)
+        # stamp the fleet makespan so summaries use the true serving window
+        # and can count still-in-flight requests as SLO misses
+        self.metrics.t_end = self.makespan
         return self.metrics
 
     # ------------------------------------------------------------- internals
@@ -185,9 +204,12 @@ class ClusterRuntime:
             if horizon is not None and t > horizon:
                 break                  # the future: in-flight work acts first
             _, _, entry = heapq.heappop(self._arrivals)
-            i = self.policy.pick(self.route_pool, entry.isl, entry.osl)
+            i = self.policy.pick(
+                self.route_pool, entry.isl, entry.osl,
+                urgency=self._classes.normalized_urgency(entry.slo_class))
             req = self.route_pool[i].engine.submit(
-                entry.isl, entry.osl, arrival=entry.arrival)
+                entry.isl, entry.osl, arrival=entry.arrival,
+                slo_class=entry.slo_class)
             self.submitted.append(req)
 
     def _harvest_prefill_complete(self, w: Worker):
@@ -204,15 +226,25 @@ class ClusterRuntime:
             })
 
     def _deliver_migrations(self):
+        pending = sorted(self._migrating, key=lambda m: m["ready"])
         still = []
-        for m in sorted(self._migrating, key=lambda m: m["ready"]):
+        while pending:
+            m = pending.pop(0)
             req, ready = m["req"], m["ready"]
-            # delivering to an idle worker fast-forwards its clock to the
+            # Delivering to an idle worker fast-forwards its clock to the
             # transfer completion — only allowed when that completion is the
-            # fleet's next event, or an earlier-ready transfer (ejected on a
-            # later step) would find the idle time already burned
-            hz = min((t for t in (self._next_action_time(w)
-                                  for w in self.workers) if t is not None),
+            # fleet's NEXT event. The horizon is recomputed after every
+            # delivery (adopting an earlier transfer advances the target's
+            # clock and queues work on it, moving the fleet's next event) and
+            # counts events engines can't see yet: transfers still awaiting a
+            # slot this pass and unrouted arrivals — either can spawn an
+            # earlier delivery to this idle worker, and a stale horizon would
+            # burn the idle time that delivery should have used.
+            hz = min([t for t in (self._next_action_time(w)
+                                  for w in self.workers) if t is not None]
+                     + [p["ready"] for p in pending]
+                     + [s["ready"] for s in still]
+                     + ([self._arrivals[0][0]] if self._arrivals else []),
                      default=float("inf"))
             remaining = req.max_new_tokens - req.generated
 
@@ -224,7 +256,9 @@ class ClusterRuntime:
                         and (dw.engine.now >= ready
                              or (ready <= hz
                                  and not dw.engine.sched.has_work))]
-            i = self.dispatcher.pick(eligible, req) if eligible else None
+            urgency = self._classes.normalized_urgency(req.slo_class)
+            i = self.dispatcher.pick(eligible, req, urgency=urgency) \
+                if eligible else None
             if i is None:
                 still.append(m)
                 continue

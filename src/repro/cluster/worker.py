@@ -15,7 +15,7 @@ router and the admission controller agree about saturation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core import perf_model as pm
@@ -119,9 +119,13 @@ def make_sim_worker(cfg: ModelConfig, plan: pm.ParallelismPlan,
                     max_batched_tokens: int = 8192,
                     chunk_size: int = 512, admission: Optional[str] = None,
                     autotune: bool = False, dtype_bytes: int = 2,
-                    cache_dtype_bytes: int = 2, rid_source=None) -> Worker:
+                    cache_dtype_bytes: int = 2, rid_source=None,
+                    class_priorities: Optional[Dict[str, int]] = None,
+                    class_kv_headroom: float = 0.0) -> Worker:
     """Virtual-clock worker with paper-calibrated capacity and role-default
-    admission (see `default_n_pages` / `default_admission`)."""
+    admission (see `default_n_pages` / `default_admission`).
+    ``class_priorities``/``class_kv_headroom`` enable multi-tenant SLO-class
+    scheduling (urgent classes jump the queue and keep a KV slice)."""
     if n_pages is None:
         n_pages = default_n_pages(cfg, plan, hw, dtype_bytes, page_size,
                                   cache_dtype_bytes)
@@ -131,7 +135,9 @@ def make_sim_worker(cfg: ModelConfig, plan: pm.ParallelismPlan,
                         max_num_seqs=max_seqs,
                         max_num_batched_tokens=max_batched_tokens,
                         chunk_size=chunk_size, admission_mode=admission,
-                        autotune=autotune, prefill_only=role == "prefill")
+                        autotune=autotune, prefill_only=role == "prefill",
+                        class_priorities=dict(class_priorities or {}),
+                        class_kv_headroom=class_kv_headroom)
     eng = InferenceEngine(cfg, ecfg, SimRunner(cfg, plan, hw, dtype_bytes),
                           rid_source=rid_source)
     return Worker(engine=eng, role=role, name=name)

@@ -13,10 +13,10 @@ import dataclasses
 import heapq
 import itertools
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.admission import AdmissionPolicy
+from repro.core.admission import AdmissionPolicy, ClassPolicy
 from repro.core.autotuner import AutotunerConfig, ConcurrencyAutotuner
 from repro.core.kv_cache import PagedAllocator
 from repro.core.metrics import MetricsLog
@@ -35,6 +35,10 @@ class EngineConfig:
     autotune: bool = False
     snapshot_every: int = 1
     prefill_only: bool = False           # disaggregated prefill worker
+    # multi-tenant SLO classes: name -> urgency (higher = more latency-
+    # critical), and the pool fraction only top-urgency requests may use
+    class_priorities: Dict[str, int] = dataclasses.field(default_factory=dict)
+    class_kv_headroom: float = 0.0
 
 
 class InferenceEngine:
@@ -47,7 +51,10 @@ class InferenceEngine:
         self.sched = Scheduler(
             SchedulerConfig(ecfg.max_num_seqs, ecfg.max_num_batched_tokens,
                             ecfg.chunk_size, prefill_only=ecfg.prefill_only),
-            self.alloc, AdmissionPolicy(mode=ecfg.admission_mode))
+            self.alloc, AdmissionPolicy(
+                mode=ecfg.admission_mode,
+                classes=ClassPolicy(priority=dict(ecfg.class_priorities),
+                                    kv_headroom=ecfg.class_kv_headroom)))
         self.metrics = MetricsLog()
         self.virtual_clock = virtual_clock
         self.now = 0.0
@@ -63,17 +70,23 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt, max_new_tokens: int,
-               arrival: Optional[float] = None) -> Request:
+               arrival: Optional[float] = None,
+               slo_class: str = "") -> Request:
         if isinstance(prompt, int):
             prompt = [1] * prompt        # synthetic token ids (sim mode)
         req = Request(rid=next(self._rid), prompt=list(prompt),
                       max_new_tokens=max_new_tokens,
-                      arrival=self.now if arrival is None else arrival)
+                      arrival=self.now if arrival is None else arrival,
+                      slo_class=slo_class)
+        # validation runs BEFORE accounting on both paths — a rejected
+        # request must not linger in metrics.submitted as a phantom SLO miss
         if req.arrival > self.now:
             self.sched.validate(req)     # fail fast, like sched.submit
+            self.metrics.submit(req)
             heapq.heappush(self._pending, (req.arrival, req.rid, req))
         else:
-            self.sched.submit(req)
+            self.sched.submit(req)       # validates internally
+            self.metrics.submit(req)
         return req
 
     def issued_rids(self) -> List[int]:
@@ -106,11 +119,16 @@ class InferenceEngine:
     def eject(self, req: Request) -> Request:
         """Remove a request from this engine without finishing it (the
         disaggregated hand-off: its KV pages are freed here and re-allocated
-        on the target via ``inject``)."""
+        on the target via ``inject``). The request leaves this engine's
+        submitted log too — per-engine SLO accounting covers requests the
+        engine is responsible for finishing; the adopter records it on
+        inject (fleet-level accounting lives in ClusterMetrics)."""
         if req in self.sched.running:
             self.sched.running.remove(req)
         elif req in self.sched.waiting:
             self.sched.waiting.remove(req)
+        if req in self.metrics.submitted:
+            self.metrics.submitted.remove(req)
         self.alloc.free(req.rid)
         if not self.virtual_clock:
             self.runner.release(req)
@@ -119,7 +137,10 @@ class InferenceEngine:
     def inject(self, req: Request) -> bool:
         """Adopt a migrated prefill-complete request into the running set.
         Returns False when no KV/concurrency room (caller retries later)."""
-        return self.sched.inject_running(req)
+        if not self.sched.inject_running(req):
+            return False
+        self.metrics.submit(req)
+        return True
 
     def step(self) -> bool:
         """One engine iteration. Returns False when idle."""

@@ -19,6 +19,8 @@ class Request:
     prompt: List[int]                  # token ids (real exec) — len == ISL
     max_new_tokens: int                # OSL budget
     arrival: float = 0.0
+    slo_class: str = ""                # SLO-class tag (multi-tenant tiers);
+                                       # "" = the scenario's default class
     # progress
     state: State = State.WAITING
     prompt_pos: int = 0                # chunked-prefill progress

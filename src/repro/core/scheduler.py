@@ -11,6 +11,14 @@ Each engine step builds one iteration batch:
      filled greedily from admitted requests' outstanding prompt chunks.
   3. admission: WAITING requests enter while the AdmissionPolicy allows and
      the concurrency cap (max_num_seqs, possibly autotuned) has room.
+
+Multi-tenant SLO classes (the admission policy's ``ClassPolicy``): a newly
+submitted request of a more urgent class is inserted ahead of waiting
+lower-urgency requests (never ahead of preempted requests, whose
+resume-first position is the forward-progress guarantee), and preemption
+victims are drawn from the least urgent running class first — interactive
+requests jump batch queues and evict batch KV, batch absorbs the
+backpressure.
 """
 from __future__ import annotations
 
@@ -66,7 +74,22 @@ class Scheduler:
 
     def submit(self, req: Request):
         self.validate(req)
-        self.waiting.append(req)
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request):
+        """Class-priority insert: jump ahead of strictly-less-urgent waiting
+        requests, but never ahead of an equal/higher tier (FCFS within a
+        class) and never ahead of a PREEMPTED request — preempted victims
+        resume first or the recompute-livelock guard breaks."""
+        urg = self.admission.classes.urgency
+        pos = len(self.waiting)
+        while pos > 0:
+            ahead = self.waiting[pos - 1]
+            if ahead.state is State.PREEMPTED \
+                    or urg(ahead.slo_class) >= urg(req.slo_class):
+                break
+            pos -= 1
+        self.waiting.insert(pos, req)
 
     def inject_running(self, req: Request) -> bool:
         """Adopt a migrated (prefill-complete) request directly into the
@@ -159,13 +182,20 @@ class Scheduler:
 
     # ------------------------------------------------------------- internals
     def _pick_victim(self, exclude: Request) -> Optional[Request]:
-        """vLLM recompute preemption: evict the most recently arrived running
-        request (minimises lost work under FCFS). Ties broken by rid so the
-        order is a strict total order."""
+        """vLLM recompute preemption, class-aware: evict from the least
+        urgent running class first, and within a class the most recently
+        arrived request (minimises lost work under FCFS). Ties broken by rid
+        so the order is a strict total order. Single-class fleets reduce to
+        the original youngest-victim rule, keeping its forward-progress
+        guarantee (the oldest request is never a victim); across classes the
+        guarantee holds per tier — the preemptor always makes progress, so a
+        batch victim thrashing under interactive pressure is backpressure,
+        not livelock."""
+        urg = self.admission.classes.urgency
         cands = [r for r in self.running if r is not exclude]
         if not cands:
             return None
-        return max(cands, key=lambda r: (r.arrival, r.rid))
+        return max(cands, key=lambda r: (-urg(r.slo_class), r.arrival, r.rid))
 
     def _preempt(self, req: Request, out: List[Request]):
         self.alloc.free(req.rid)

@@ -92,11 +92,21 @@ def _process(sc: Scenario):
 def trace(sc: Scenario):
     """The scenario's workload as replayable ``TraceEntry`` rows. Lengths
     depend only on (workload, n_requests, osl_cap, seed) — never on the
-    arrival process — so fidelities and fleet variants see identical work."""
-    from repro.cluster.arrivals import make_trace
+    arrival process — so fidelities and fleet variants see identical work.
+    Entries are tagged with SLO classes from ``traffic.class_mix``
+    (deterministic in the seed; class priorities never change the tagging,
+    so class-aware and class-blind variants see the same tiered trace); a
+    single-class scenario tags everything with its default class."""
+    from repro.cluster.arrivals import assign_classes, make_trace
     t = sc.traffic
-    return make_trace(_process(sc), sc.traffic.workload_spec(), t.n_requests,
-                      seed=t.seed, osl_cap=t.osl_cap)
+    entries = make_trace(_process(sc), sc.traffic.workload_spec(),
+                         t.n_requests, seed=t.seed, osl_cap=t.osl_cap)
+    if t.class_mix:
+        return assign_classes(entries, t.class_mix, seed=t.seed + 2)
+    if sc.slos:
+        default = sc.slos[0].name
+        return [dataclasses.replace(e, slo_class=default) for e in entries]
+    return entries
 
 
 def requests(sc: Scenario) -> List[Tuple[int, int]]:
@@ -160,13 +170,16 @@ def estimate_fleet(sc: Scenario) -> planner.PlanEstimate:
 # --------------------------------------------------------- fidelity 2: engine
 def _build_worker(r: Resolved, rg: ResolvedGroup, name: str = "") -> Worker:
     g = rg.group
+    sc = r.scenario
     return make_sim_worker(
         r.model, g.plan, rg.hardware, role=g.role, name=name,
         n_pages=rg.n_pages, page_size=g.page_size, max_seqs=g.max_seqs,
         max_batched_tokens=g.max_batched_tokens, chunk_size=g.chunk_size,
         admission=rg.admission, autotune=g.autotune,
-        dtype_bytes=r.scenario.model.dtype_bytes,
-        cache_dtype_bytes=r.scenario.model.cache_dtype_bytes)
+        dtype_bytes=sc.model.dtype_bytes,
+        cache_dtype_bytes=sc.model.cache_dtype_bytes,
+        class_priorities=sc.class_priorities(),
+        class_kv_headroom=sc.class_kv_headroom)
 
 
 def to_engine(sc: Scenario, group: int = 0) -> InferenceEngine:
@@ -188,5 +201,6 @@ def to_cluster(sc: Scenario):
         for i in range(rg.group.count):
             workers.append(_build_worker(r, rg, name=f"{prefix}{i}"))
     ccfg = ClusterConfig(policy=sc.routing, dispatcher=sc.dispatch,
-                        transfer_dtype_bytes=sc.transfer_dtype_bytes)
+                         transfer_dtype_bytes=sc.transfer_dtype_bytes,
+                         class_priorities=sc.class_priorities())
     return ClusterRuntime(workers, ccfg)

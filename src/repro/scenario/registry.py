@@ -15,8 +15,9 @@ from repro.core.perf_model import ParallelismPlan
 from repro.scenario.spec import (ModelRef, Scenario, SLOClass, Traffic,
                                  WorkerGroup)
 
-INTERACTIVE = SLOClass(name="interactive", ttft_s=0.5, tpot_s=0.020)
-BATCH = SLOClass(name="batch", ttft_s=30.0, tpot_s=0.5)
+INTERACTIVE = SLOClass(name="interactive", ttft_s=0.5, tpot_s=0.020,
+                       priority=10)
+BATCH = SLOClass(name="batch", ttft_s=30.0, tpot_s=0.5, priority=0)
 
 # the paper's offline-throughput workload: Natural-Reasoning lengths,
 # everything submitted at once (§III-B)
@@ -54,6 +55,19 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
         notes="same 4 devices split 1 prefill + 3 decode with modeled "
               "KV-transfer migration (§III phase divergence made "
               "structural)"),
+    # ---- mixed tenancy: interactive + batch on one fleet (slo_tiers) ------
+    Scenario(
+        name="ds8b-4xh200-mixed",
+        model=ModelRef("ds-distill-8b"),
+        fleet=(WorkerGroup(role="colocated", count=4, n_pages=3000,
+                           max_seqs=64, prefix="co"),),
+        traffic=dataclasses.replace(
+            _LONG_OPEN, class_mix=(("interactive", 0.4), ("batch", 0.6))),
+        slos=(INTERACTIVE, BATCH),
+        class_kv_headroom=0.10,
+        notes="multi-tenant SLO classes: interactive jumps queues and keeps "
+              "a 10% KV slice, batch absorbs backpressure — the fleet-level "
+              "latency-vs-throughput tier trade-off (benchmarks/slo_tiers)"),
     # ---- the 8xH200 testbed points (one per model family) -----------------
     Scenario(
         name="ds8b-8xh200-dp8",

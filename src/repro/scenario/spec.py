@@ -110,6 +110,12 @@ class Traffic:
     ``poisson``/``gamma`` are open-loop; ``trace`` replays explicit arrival
     times. The same ``seed`` always draws the same request lengths, so fleets
     compared under different processes see identical work.
+
+    ``class_mix`` is the multi-tenant traffic split: (SLO-class name, weight)
+    pairs; each request in the compiled trace is deterministically tagged
+    with a class drawn from this mix (same seed -> same tagging, so
+    class-aware and class-blind fleets see identical per-request tiers).
+    Empty = single-tenant (every request gets the scenario's default class).
     """
     process: str = "closed"
     rate: float = 0.0             # req/s (poisson | gamma)
@@ -119,6 +125,7 @@ class Traffic:
     n_requests: int = 150
     osl_cap: Optional[int] = None
     seed: int = 0
+    class_mix: Tuple[Tuple[str, float], ...] = ()
 
     def __post_init__(self):
         if self.process not in PROCESSES:
@@ -130,6 +137,12 @@ class Traffic:
         if self.process == "trace" and len(self.arrivals) < self.n_requests:
             raise ValueError(f"trace has {len(self.arrivals)} arrivals, "
                              f"need {self.n_requests}")
+        mix = tuple((str(n), float(w)) for n, w in self.class_mix)
+        if any(w <= 0 for _, w in mix):
+            raise ValueError(f"class_mix weights must be positive: {mix}")
+        if len({n for n, _ in mix}) != len(mix):
+            raise ValueError(f"class_mix names must be unique: {mix}")
+        object.__setattr__(self, "class_mix", mix)
 
     def workload_spec(self) -> WorkloadSpec:
         return _lookup(WORKLOADS, self.workload, "workload")
@@ -137,11 +150,16 @@ class Traffic:
 
 @dataclasses.dataclass(frozen=True)
 class SLOClass:
-    """A named latency contract (the multi-tenant hook: interactive vs batch).
-    ``None`` targets are unconstrained."""
+    """A named latency contract (the multi-tenant hook: interactive vs
+    batch). ``None`` targets are unconstrained. ``priority`` is the class's
+    scheduling urgency (higher = more latency-critical): urgent classes jump
+    waiting queues, draw on the reserved KV headroom slice, and are preferred
+    by class-aware routing; preemption victims come from the least urgent
+    class first."""
     name: str = "interactive"
     ttft_s: Optional[float] = None
     tpot_s: Optional[float] = None
+    priority: int = 0
 
     def slo(self) -> SLO:
         return SLO(ttft_s=self.ttft_s, tpot_s=self.tpot_s)
@@ -158,6 +176,8 @@ class Scenario:
     routing: str = "memory_aware"        # RoutingPolicy name
     dispatch: str = "least_headroom"     # DispatchPolicy name
     transfer_dtype_bytes: int = 2        # KV wire format for migration
+    class_kv_headroom: float = 0.0       # pool fraction only the top-urgency
+                                         # SLO class may use (tier slice)
     notes: str = ""
 
     def __post_init__(self):
@@ -175,6 +195,15 @@ class Scenario:
         if "prefill" in roles and "decode" not in roles:
             raise ValueError("prefill groups need a decode group to "
                              "migrate into")
+        if not 0.0 <= self.class_kv_headroom < 1.0:
+            raise ValueError(f"class_kv_headroom must be in [0, 1), got "
+                             f"{self.class_kv_headroom}")
+        known = {c.name for c in self.slos}
+        unknown = [n for n, _ in self.traffic.class_mix if n not in known]
+        if unknown:
+            raise ValueError(
+                f"traffic class_mix names {unknown} have no SLOClass in "
+                f"scenario {self.name!r} (have {sorted(known)})")
 
     # ------------------------------------------------------------ properties
     @property
@@ -196,6 +225,16 @@ class Scenario:
                 return c.slo()
         raise KeyError(f"no SLO class {name!r} in scenario {self.name!r} "
                        f"(have {[c.name for c in self.slos]})")
+
+    def slo_map(self) -> Dict[str, SLO]:
+        """Every SLO class as name -> core SLO (the class-conditional
+        metrics table; ``slos[0]`` is the default class)."""
+        return {c.name: c.slo() for c in self.slos}
+
+    def class_priorities(self) -> Dict[str, int]:
+        """Class name -> scheduling urgency, for admission/scheduler/routing
+        (empty or uniform = class-blind behaviour)."""
+        return {c.name: c.priority for c in self.slos}
 
     # ------------------------------------------------- dict/JSON round trip
     def to_dict(self) -> Dict[str, Any]:

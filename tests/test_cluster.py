@@ -1,16 +1,18 @@
 """Cluster runtime: open-loop arrival gating, KV-transfer model,
-colocated-vs-disaggregated equivalence, routing policies, SLO accounting."""
+colocated-vs-disaggregated equivalence, routing policies, SLO accounting,
+multi-tenant SLO classes."""
 import pytest
 
 from repro.configs.paper_models import DS_DISTILL_8B
 from repro.core import perf_model as pm
 from repro.core.engine import EngineConfig, InferenceEngine
-from repro.core.metrics import SLO, goodput_tok_s, slo_attainment
+from repro.core.metrics import (SLO, goodput_tok_s, latency_stats,
+                                slo_attainment)
 from repro.core.request import Request
 from repro.core.runner import SimRunner
 from repro.cluster import (ClusterConfig, ClusterRuntime, GammaProcess,
                            MemoryAware, PoissonProcess, TraceProcess,
-                           make_trace, make_sim_worker)
+                           assign_classes, make_trace, make_sim_worker)
 from repro.data.reasoning import REASONING
 
 CFG = DS_DISTILL_8B
@@ -140,6 +142,14 @@ def test_disaggregated_decode_workers_never_prefill_new_requests():
         assert rec.src == pre.name
         assert rec.t_ready > rec.t_eject       # transfer takes positive time
         assert rec.t_delivered >= rec.t_ready  # causality at the adopter
+    # per-engine accounting follows the migration: ejected requests leave
+    # the prefill log, adopters record them — each engine's submitted set
+    # covers exactly what it finished
+    assert pre.engine.metrics.submitted == []
+    for w in ws:
+        if w.role == "decode":
+            sub = {r.rid for r in w.engine.metrics.submitted}
+            assert {r.rid for r in w.engine.metrics.finished} <= sub
 
 
 def test_migrated_timestamps_monotone():
@@ -154,6 +164,34 @@ def test_migrated_timestamps_monotone():
 
 
 # ------------------------------------------------------------------ policies
+def test_memory_aware_warmup_no_spurious_straggle():
+    """Regression: the lazily-grown EWMA list held 0.0 for workers that never
+    stepped, dragging the fleet mean down — the first active worker was
+    charged a straggler penalty at warmup while never-stepped workers beyond
+    the list length got 0.0 straggle for free."""
+    pol = MemoryAware()
+    for _ in range(3):
+        pol.note_step(1, 0.010)
+    # the sole observed worker IS the fleet mean: zero straggle, not +1.0
+    assert pol._straggle(1) == pytest.approx(0.0)
+    # unobserved workers have no data — no reward (was -1.0), no penalty
+    assert pol._straggle(0) == 0.0
+    assert pol._straggle(2) == 0.0
+    # the first observation seeds the EWMA (no bias toward zero at warmup)
+    pol2 = MemoryAware(ewma_alpha=0.2)
+    pol2.note_step(0, 0.040)
+    assert pol2._lat_ewma[0] == pytest.approx(0.040)
+    # and warmup must not skew routing: equal-headroom fleet, only worker 0
+    # observed — the pick must not avoid (or favour) it for straggle reasons
+    ws = _workers("colocated", n=3)
+    pol3 = MemoryAware()
+    pol3.note_step(0, 0.020)
+    assert len(pol3._lat_ewma) < 3
+    pol3.pick(ws, 100, 400)
+    assert len(pol3._lat_ewma) == 3      # sized to the pool, None-padded
+    assert pol3._straggle(0) == pytest.approx(0.0)
+
+
 def test_memory_aware_straggler_penalty_is_scalar():
     """Regression (old tuple-key bug): a slow replica with EQUAL headroom
     must be avoided — the straggler term must influence the score even when
@@ -256,3 +294,251 @@ def test_cluster_saturation_timeline_reported():
         assert tl and all(0.0 <= p["kv_util"] <= 1.0 for p in tl)
         assert s["workers"][w.name]["peak_kv_util"] > 0.0
     assert "goodput_tok_s" in s and "slo_attainment" in s
+
+
+# ----------------------------------------------- migration delivery horizon
+def test_migration_delivery_respects_pending_fleet_events():
+    """Regression: the idle-fast-forward horizon must count events engines
+    can't see yet — an unrouted arrival (or an undelivered earlier transfer)
+    can spawn a delivery that needs the idle time a later-ready transfer
+    would otherwise burn."""
+    ws = _workers("disaggregated", n=2)          # pre0 + dec0
+    rt = ClusterRuntime(ws, ClusterConfig())
+    rt.submit(isl=100, osl=50, arrival=2.0)      # unrouted future arrival
+    req = Request(rid=999, prompt=[1] * 200, max_new_tokens=100, arrival=0.0)
+    req.prompt_pos = 200
+    req.generated = 1
+    rt._migrating.append({"req": req, "src": "pre0",
+                          "eject": 0.5, "ready": 5.0})
+    rt._deliver_migrations()
+    dec = next(w for w in ws if w.role == "decode")
+    # the t=2.0 arrival is the fleet's next event: dec0 must NOT be
+    # fast-forwarded to the t=5.0 transfer completion past it
+    assert dec.engine.now == 0.0
+    assert len(rt._migrating) == 1
+    # and the run still drains: both requests finish
+    m = rt.run()
+    assert m.summary()["n_finished"] == 2
+    for rec in m.migrations:
+        assert rec.t_delivered >= rec.t_ready
+
+
+# ----------------------------------------------------- goodput denominators
+def test_unfinished_requests_count_as_slo_misses_with_horizon():
+    """Regression: finished-only attainment ignored the worst violators —
+    the requests still in flight at the horizon."""
+    def mk_finished(ttft, tpot, gen=100):
+        r = Request(rid=0, prompt=[1] * 10, max_new_tokens=gen)
+        r.arrival, r.t_admitted = 0.0, 0.0
+        r.t_first_token = ttft
+        r.generated = gen
+        r.t_finished = ttft + tpot * (gen - 1)
+        return r
+    good = mk_finished(0.5, 0.01)
+    unfin = Request(rid=1, prompt=[1] * 10, max_new_tokens=100, arrival=1.0)
+    unfin.generated = 30                     # in flight at horizon
+    slo = SLO(ttft_s=1.0, tpot_s=0.05)
+    # legacy (no horizon): finished-only denominator
+    assert slo_attainment([good, unfin], slo) == 1.0
+    # with a horizon the in-flight request is a miss, not an omission
+    assert slo_attainment([good, unfin], slo, horizon=10.0) == 0.5
+    # and its tokens are throughput, not goodput
+    assert goodput_tok_s([good, unfin], slo, duration_s=10.0) \
+        == pytest.approx(10.0)
+    # a request finishing AFTER the horizon misses within that window
+    assert slo_attainment([good], slo, horizon=1.0) == 0.0   # finishes 1.49
+    assert goodput_tok_s([good], slo, duration_s=1.0, horizon=1.0) == 0.0
+
+
+def test_rejected_submit_leaves_no_phantom_in_accounting():
+    """Regression: submit recorded the request before validation could
+    reject it, leaving an eternal 'unfinished miss' in horizon accounting."""
+    w = make_sim_worker(CFG, PLAN, n_pages=50)
+    with pytest.raises(ValueError):
+        w.engine.submit(100, 5000)           # exceeds the KV pool
+    assert w.engine.metrics.submitted == []
+
+
+def test_cluster_summary_uses_fleet_makespan_denominator():
+    """Regression: duration_s derived from finished requests only shrank the
+    goodput denominator while the tail was still being served. The runtime
+    stamps its fleet clock; the summary must use it."""
+    ws = _workers("colocated", n=2, n_pages=3000, max_seqs=64)
+    rt = ClusterRuntime(ws, ClusterConfig())
+    trace = make_trace(PoissonProcess(rate=10.0), REASONING, 20, seed=3,
+                       osl_cap=400)
+    rt.submit_trace(trace)
+    m = rt.run()
+    s = m.summary(SLO(ttft_s=2.0, tpot_s=0.05))
+    makespan = max(w.engine.now for w in ws)
+    t0 = min(r.arrival for r in rt.submitted)
+    assert m.t_end == pytest.approx(makespan)
+    assert s["duration_s"] == pytest.approx(makespan - t0)
+    # the fleet clock can only extend past the last finish, never shrink
+    last_finish = max(r.t_finished for r in m.finished_requests())
+    assert makespan >= last_finish - 1e-9
+    assert s["n_submitted"] == 20 and s["n_unfinished"] == 0
+
+
+# ------------------------------------------------------------ latency stats
+def test_latency_stats_percentiles():
+    """Regression: even-length p50 took the upper-middle element and p95 used
+    int(0.95 n), which lands on the max for n <= 20."""
+    st = latency_stats(list(range(1, 21)))           # 1..20
+    assert st["p50"] == pytest.approx(10.5)          # true median, not 11
+    assert st["p95"] == 19                           # nearest-rank, not 20
+    assert st["max"] == 20
+    assert st["mean"] == pytest.approx(10.5)
+    assert latency_stats([3.0, None, 1.0])["p50"] == pytest.approx(2.0)
+    assert latency_stats([7.0])["p95"] == 7.0
+    assert latency_stats([]) == {"mean": 0.0, "p50": 0.0, "p95": 0.0,
+                                 "max": 0.0}
+    # MetricsLog and ClusterMetrics both report through this one helper
+    ws = _workers("colocated", n=1, n_pages=3000)
+    rt = ClusterRuntime(ws, ClusterConfig())
+    for i in range(4):
+        rt.submit(100, 50, arrival=0.1 * i)
+    m = rt.run()
+    fleet = m.request_summary()["ttft_s"]
+    engine = ws[0].engine.metrics.summary()["ttft_s"]
+    assert fleet == engine
+
+
+def test_slo_attained_none_measurements_are_symmetric():
+    """Regression: ttft=None failed while tpot=None passed. Both are now
+    vacuous — an undefined measurement cannot violate a target (single-token
+    outputs have no inter-token gap); unfinished-as-miss is the horizon
+    accounting's job."""
+    r = Request(rid=0, prompt=[1] * 10, max_new_tokens=1)
+    r.arrival, r.t_first_token, r.t_finished = 0.0, 0.1, 0.1
+    r.generated = 1                              # tpot undefined
+    assert SLO(tpot_s=0.001).attained(r)
+    assert not SLO(ttft_s=0.05).attained(r)      # defined ttft still misses
+    assert SLO(ttft_s=0.2, tpot_s=0.001).attained(r)
+    # ttft undefined on a finished request (degenerate): same vacuous rule
+    r2 = Request(rid=1, prompt=[1] * 10, max_new_tokens=5)
+    r2.arrival, r2.t_finished, r2.generated = 0.0, 1.0, 5
+    assert SLO(ttft_s=0.05).attained(r2)
+    # unfinished never attains, regardless of targets
+    assert not SLO().attained(Request(rid=2, prompt=[1], max_new_tokens=1))
+
+
+# ------------------------------------------------------- multi-tenant classes
+def _mixed_trace(n, rate, seed=13, osl_cap=600):
+    trace = make_trace(PoissonProcess(rate=rate), REASONING, n, seed=seed,
+                       osl_cap=osl_cap)
+    return assign_classes(trace, (("interactive", 0.5), ("batch", 0.5)),
+                          seed=seed + 1)
+
+
+PRIORITIES = {"interactive": 10, "batch": 0}
+
+
+def test_uniform_priorities_are_class_blind():
+    """Contract: empty OR uniform priorities = class-blind. A single-tenant
+    scenario whose one class carries a nonzero priority must not flip
+    routing/dispatch into the urgent branches (normalised urgency is
+    differentiation, not absolute level)."""
+    from repro.core.admission import ClassPolicy
+    single = ClassPolicy(priority={"interactive": 10})
+    assert single.normalized_urgency("interactive") == 0.0
+    uniform = ClassPolicy(priority={"gold": 5, "silver": 5})
+    assert uniform.normalized_urgency("gold") == 0.0
+    tiered = ClassPolicy(priority=PRIORITIES)
+    assert tiered.normalized_urgency("interactive") == 1.0
+    assert tiered.normalized_urgency("batch") == 0.0
+    assert tiered.normalized_urgency("") == 0.0      # untagged = least tier
+    assert ClassPolicy().normalized_urgency("anything") == 0.0
+
+
+def test_interactive_jumps_waiting_queue_but_not_preempted():
+    w = make_sim_worker(CFG, PLAN, n_pages=3000, max_seqs=4,
+                        class_priorities=PRIORITIES)
+    eng = w.engine
+    batch = [eng.submit(100, 50, slo_class="batch") for _ in range(6)]
+    inter = eng.submit(100, 50, slo_class="interactive")
+    waiting = list(eng.sched.waiting)
+    # the interactive request sits ahead of every waiting batch request
+    assert waiting.index(inter) < min(waiting.index(b) for b in batch
+                                      if b in waiting)
+    # but a preempted victim still resumes first (forward-progress guard)
+    from repro.core.request import State
+    victim = waiting[0] if waiting[0] is not inter else waiting[1]
+    eng.sched.waiting.remove(victim)
+    victim.state = State.PREEMPTED
+    eng.sched.waiting.appendleft(victim)
+    late = eng.submit(100, 50, slo_class="interactive")
+    assert list(eng.sched.waiting)[0] is victim
+    assert list(eng.sched.waiting).index(late) \
+        < list(eng.sched.waiting).index(batch[-1])
+
+
+def test_class_victim_selection_prefers_batch():
+    w = make_sim_worker(CFG, PLAN, n_pages=3000, max_seqs=8,
+                        class_priorities=PRIORITIES)
+    sched = w.engine.sched
+    old_batch = Request(rid=1, prompt=[1] * 50, max_new_tokens=50,
+                        arrival=0.0, slo_class="batch")
+    young_inter = Request(rid=2, prompt=[1] * 50, max_new_tokens=50,
+                          arrival=1.0, slo_class="interactive")
+    for r in (old_batch, young_inter):
+        r.prompt_pos = 50
+        assert w.engine.inject(r)
+    grower = Request(rid=3, prompt=[1] * 50, max_new_tokens=50, arrival=2.0,
+                     slo_class="interactive")
+    # lowest-urgency class is evicted first even though the interactive
+    # request is younger (single-class fleets keep youngest-victim FCFS)
+    assert sched._pick_victim(exclude=grower) is old_batch
+
+
+def test_batch_blocked_from_interactive_kv_slice():
+    """KV headroom slice: with the pool predicted-full past (1 - reserve -
+    slice), a batch candidate is refused admission while an identical
+    interactive candidate still admits."""
+    w = make_sim_worker(CFG, PLAN, n_pages=100, max_seqs=16,
+                        class_priorities=PRIORITIES, class_kv_headroom=0.2)
+    eng = w.engine
+    adm = eng.sched.admission
+    running = []
+    r = Request(rid=1, prompt=[1] * 600, max_new_tokens=600,
+                slo_class="batch")
+    r.prompt_pos = 600
+    assert eng.inject(r)
+    running.append(r)
+    # running needs 76 pages; candidate adds 13 -> 89 total, which fits the
+    # protected budget (95 = (1-reserve)*100) but not the batch budget
+    # (75 = (1-reserve-0.2)*100)
+    batch_cand = Request(rid=2, prompt=[1] * 100, max_new_tokens=100,
+                         slo_class="batch")
+    inter_cand = Request(rid=3, prompt=[1] * 100, max_new_tokens=100,
+                         slo_class="interactive")
+    decided = (adm.admit(batch_cand, running, eng.alloc),
+               adm.admit(inter_cand, running, eng.alloc))
+    assert decided == (False, True)
+
+
+def test_interactive_never_starved_and_class_goodput_sums():
+    """End-to-end invariants on a loaded mixed-tenancy fleet: every
+    interactive request is eventually served (no starvation), the interactive
+    tier's p95 TTFT beats batch's, and class-conditional goodput sums to
+    fleet goodput."""
+    slos = {"interactive": SLO(ttft_s=0.5, tpot_s=0.02),
+            "batch": SLO(ttft_s=30.0, tpot_s=0.5)}
+    ws = [make_sim_worker(CFG, PLAN, role="colocated", name=f"co{i}",
+                          n_pages=1500, max_seqs=32,
+                          class_priorities=PRIORITIES, class_kv_headroom=0.1)
+          for i in range(2)]
+    rt = ClusterRuntime(ws, ClusterConfig(class_priorities=PRIORITIES))
+    rt.submit_trace(_mixed_trace(40, rate=25.0))
+    m = rt.run()
+    s = m.summary(slos=slos)
+    assert s["n_finished"] == 40                 # nobody starved
+    inter = [r for r in m.finished_requests() if r.slo_class == "interactive"]
+    batch = [r for r in m.finished_requests() if r.slo_class == "batch"]
+    assert inter and batch
+    p95 = lambda rs: latency_stats([r.ttft() for r in rs])["p95"]  # noqa:E731
+    assert p95(inter) <= p95(batch)
+    total = sum(c["goodput_tok_s"] for c in s["classes"].values())
+    assert total == pytest.approx(s["goodput_tok_s"])
+    assert {c.slo_class for c in m.finished_requests()} \
+        == {"interactive", "batch"}

@@ -12,7 +12,7 @@ from repro.scenario import (SCENARIOS, ModelRef, Scenario, SLOClass, Traffic,
 
 def _rich_scenario() -> Scenario:
     """Exercises every schema feature: heterogeneous fleet, gamma traffic,
-    two SLO classes, non-default numerics."""
+    two prioritised SLO classes with a traffic mix, non-default numerics."""
     return Scenario(
         name="rich",
         model=ModelRef("ds-distill-32b", dtype_bytes=1, cache_dtype_bytes=1),
@@ -24,10 +24,12 @@ def _rich_scenario() -> Scenario:
                            chunk_size=256, admission="kv_aware")),
         traffic=Traffic(process="gamma", rate=6.0, cv=2.5,
                         workload="long_reasoning", n_requests=64,
-                        osl_cap=2000, seed=7),
-        slos=(SLOClass("interactive", ttft_s=0.5, tpot_s=0.02),
+                        osl_cap=2000, seed=7,
+                        class_mix=(("interactive", 0.3), ("batch", 0.7))),
+        slos=(SLOClass("interactive", ttft_s=0.5, tpot_s=0.02, priority=10),
               SLOClass("batch", ttft_s=30.0)),
         routing="jsq", dispatch="most_headroom", transfer_dtype_bytes=1,
+        class_kv_headroom=0.15,
         notes="round-trip fixture")
 
 
@@ -64,6 +66,18 @@ def test_spec_validation():
     with pytest.raises(KeyError):
         resolve(Scenario(name="x", model=ModelRef("ds-distill-8b"),
                          fleet=(WorkerGroup(hardware="h9000"),)))
+    with pytest.raises(ValueError):      # mix names need a matching SLOClass
+        Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                 fleet=(WorkerGroup(),),
+                 traffic=Traffic(class_mix=(("gold", 1.0),)),
+                 slos=(SLOClass("interactive"),))
+    with pytest.raises(ValueError):      # non-positive mix weight
+        Traffic(class_mix=(("interactive", 0.0),))
+    with pytest.raises(ValueError):      # duplicate mix names
+        Traffic(class_mix=(("a", 0.5), ("a", 0.5)))
+    with pytest.raises(ValueError):      # headroom out of range
+        Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                 fleet=(WorkerGroup(),), class_kv_headroom=1.0)
 
 
 # ---------------------------------------------------------------------- trace
@@ -165,7 +179,7 @@ def test_resolution_is_shared_across_fidelities():
     ("ds8b-8xh200-dp8", 8), ("ds14b-8xh200-dp8", 8),
     ("ds32b-8xh200-dp4tp2", 8), ("llama405b-8xh200-tp8", 8),
     ("r1-8xh200-pp4tp2", 8), ("ds8b-4xh200-colocated", 4),
-    ("ds8b-4xh200-disagg", 4),
+    ("ds8b-4xh200-disagg", 4), ("ds8b-4xh200-mixed", 4),
 ])
 def test_registry_scenarios_resolve_and_plan(name, devices):
     sc = get_scenario(name)
@@ -195,3 +209,53 @@ def test_to_cluster_runs_small_disagg_scenario_to_completion():
     assert s["n_migrations"] == 12      # every request crossed pools
     names = {w.name for w in rt.workers}
     assert names == {"pre0", "dec0", "dec1", "dec2"}
+
+
+# ------------------------------------------------------- multi-tenant classes
+def test_trace_class_tagging_deterministic_and_priority_independent():
+    sc = get_scenario("ds8b-4xh200-mixed")
+    sc = dataclasses.replace(sc, traffic=dataclasses.replace(
+        sc.traffic, n_requests=200))
+    t1, t2 = trace(sc), trace(sc)
+    assert t1 == t2                                   # deterministic in seed
+    names = {e.slo_class for e in t1}
+    assert names == {"interactive", "batch"}
+    frac = sum(e.slo_class == "interactive" for e in t1) / len(t1)
+    assert 0.25 < frac < 0.55                         # ~the 0.4 mix weight
+    # tagging depends on the traffic spec only — a class-blind variant
+    # (priorities zeroed, no slice) replays the identical tiered trace
+    blind = dataclasses.replace(
+        sc, slos=tuple(dataclasses.replace(c, priority=0) for c in sc.slos),
+        class_kv_headroom=0.0)
+    assert trace(blind) == t1
+    # single-class scenarios tag everything with their default class
+    co = get_scenario("ds8b-4xh200-colocated")
+    assert all(e.slo_class == "interactive" for e in trace(co))
+
+
+def test_class_config_reaches_engines_and_cluster():
+    sc = get_scenario("ds8b-4xh200-mixed")
+    assert sc.class_priorities() == {"interactive": 10, "batch": 0}
+    eng = sc.to_engine()
+    classes = eng.sched.admission.classes
+    assert classes.priority == {"interactive": 10, "batch": 0}
+    assert classes.kv_headroom == pytest.approx(0.10)
+    rt = sc.to_cluster()
+    for w in rt.workers:
+        assert w.engine.sched.admission.classes.priority["interactive"] == 10
+    assert rt.cfg.class_priorities == {"interactive": 10, "batch": 0}
+
+
+def test_mixed_scenario_cluster_run_reports_classes():
+    sc = get_scenario("ds8b-4xh200-mixed")
+    sc = dataclasses.replace(sc, traffic=dataclasses.replace(
+        sc.traffic, n_requests=24, rate=16.0))
+    rt = sc.to_cluster()
+    rt.submit_trace(sc.trace())
+    m = rt.run(max_steps=500_000)
+    s = m.summary(slos=sc.slo_map())
+    assert s["n_finished"] == 24
+    assert set(s["classes"]) == {"interactive", "batch"}
+    assert sum(c["n"] for c in s["classes"].values()) == 24
+    assert sum(c["goodput_tok_s"] for c in s["classes"].values()) \
+        == pytest.approx(s["goodput_tok_s"])
