@@ -1,10 +1,16 @@
 """Cluster serving layer: open-loop arrival replay, disaggregated
-prefill/decode pools, pluggable routing, and SLO-goodput accounting."""
+prefill/decode pools, pluggable routing, elastic autoscaling, and
+SLO-goodput accounting."""
 from repro.cluster.arrivals import (ArrivalProcess, GammaProcess,
-                                    PoissonProcess, TraceEntry, TraceProcess,
-                                    assign_classes, load_trace, make_trace,
-                                    save_trace)
-from repro.cluster.metrics import ClusterMetrics, MigrationRecord
+                                    PiecewiseRateProcess, PoissonProcess,
+                                    TraceEntry, TraceProcess, assign_classes,
+                                    load_trace, make_trace, save_trace)
+from repro.cluster.autoscale import (AutoscaleController, AutoscalePolicy,
+                                     ScalingSignals, SLOGuard,
+                                     TargetUtilization, make_autoscale_policy,
+                                     make_autoscaler)
+from repro.cluster.metrics import (ClusterMetrics, MigrationRecord,
+                                   ScalingEvent)
 from repro.cluster.policies import (DispatchPolicy, JoinShortestQueue,
                                     LeastKVHeadroom, MemoryAware,
                                     MostKVHeadroom, RoundRobin, RoutingPolicy,
@@ -14,8 +20,11 @@ from repro.cluster.worker import Worker, make_sim_worker
 
 __all__ = [
     "ArrivalProcess", "PoissonProcess", "GammaProcess", "TraceProcess",
+    "PiecewiseRateProcess",
     "TraceEntry", "make_trace", "assign_classes", "save_trace", "load_trace",
-    "ClusterMetrics", "MigrationRecord",
+    "ClusterMetrics", "MigrationRecord", "ScalingEvent",
+    "ScalingSignals", "AutoscalePolicy", "TargetUtilization", "SLOGuard",
+    "AutoscaleController", "make_autoscale_policy", "make_autoscaler",
     "RoutingPolicy", "RoundRobin", "JoinShortestQueue", "MemoryAware",
     "DispatchPolicy", "LeastKVHeadroom", "MostKVHeadroom",
     "make_policy", "make_dispatcher",

@@ -22,6 +22,21 @@ from repro.core.request import Request
 from repro.cluster.worker import Worker
 
 
+@dataclasses.dataclass(frozen=True)
+class ScalingEvent:
+    """One autoscaling lifecycle transition, stamped on the fleet clock.
+
+    kinds: ``scale_up`` (replica minted, cold start begins), ``join``
+    (weight load done, entered the route/dispatch pools), ``retire``
+    (left the pools, draining in-flight work), ``drained`` (went dark;
+    ``Worker.t_retire`` stamped)."""
+    t: float
+    kind: str
+    worker: str
+    role: str
+    pool_size: int                # active pool size AFTER the transition
+
+
 @dataclasses.dataclass
 class MigrationRecord:
     rid: int
@@ -48,6 +63,7 @@ class ClusterMetrics:
                  submitted: Optional[List[Request]] = None):
         self.workers = workers
         self.migrations: List[MigrationRecord] = []
+        self.scaling_events: List[ScalingEvent] = []
         self.submitted: List[Request] = submitted if submitted is not None \
             else []
         self.t_end: Optional[float] = None
@@ -55,6 +71,9 @@ class ClusterMetrics:
     # ------------------------------------------------------------- collection
     def note_migration(self, rec: MigrationRecord):
         self.migrations.append(rec)
+
+    def note_scaling(self, rec: ScalingEvent):
+        self.scaling_events.append(rec)
 
     def finished_requests(self) -> List[Request]:
         return [r for w in self.workers for r in w.engine.metrics.finished]
@@ -85,6 +104,20 @@ class ClusterMetrics:
         t0 = min((r.arrival for r in reqs), default=0.0)
         return max(end - t0, 1e-9), end
 
+    def worker_seconds(self, makespan: Optional[float] = None) -> float:
+        """Total provisioned worker-seconds: each worker's active window
+        (mint -> decommission, cold start included) integrated over the
+        serving window. A static fleet yields ``n_workers * duration``;
+        an autoscaled fleet pays only for the replicas it actually held —
+        the denominator that makes elastic and fixed fleets cost-comparable
+        (goodput per worker-second)."""
+        reqs = self.submitted or self.finished_requests()
+        end = makespan if makespan is not None else self.t_end
+        t0 = min((r.arrival for r in reqs), default=0.0)
+        if end is None:
+            end = t0 + finished_window_s(reqs)
+        return sum(w.active_window(end, t0) for w in self.workers)
+
     def summary(self, slo: Optional[Union[SLO, SLOMap]] = None,
                 slos: Optional[SLOMap] = None,
                 makespan: Optional[float] = None) -> Dict:
@@ -100,6 +133,7 @@ class ClusterMetrics:
         # understate throughput)
         gen = sum(r.generated for r in all_reqs)
         dur, horizon = self._window(makespan)
+        ws = self.worker_seconds(makespan)
         per_worker = {}
         for w in self.workers:
             tl = w.engine.metrics.timeline
@@ -112,6 +146,8 @@ class ClusterMetrics:
                     [p.kv_util for p in tl]) if tl else 0.0,
                 "preemptions": w.engine.sched.n_preemptions,
                 "time_to_saturation_s": sat,
+                "t_join": w.t_join,
+                "t_retire": w.t_retire,
             }
         out = {
             "n_submitted": len(all_reqs),
@@ -120,6 +156,13 @@ class ClusterMetrics:
             "gen_tokens": gen,
             "duration_s": dur,
             "throughput_tok_s": gen / dur,
+            # cost-normalised rates: tokens per provisioned worker-second —
+            # the number that makes an autoscaled fleet comparable to a
+            # statically peak-provisioned one (same goodput, fewer
+            # worker-seconds = the utilization gap recovered)
+            "worker_seconds": ws,
+            "throughput_tok_per_worker_s": gen / max(ws, 1e-9),
+            "n_scaling_events": len(self.scaling_events),
             "n_migrations": len(self.migrations),
             "mean_transfer_s": statistics.fmean(
                 [m.transfer_s for m in self.migrations])
@@ -136,6 +179,10 @@ class ClusterMetrics:
             s = class_slo_summary(pool, table, dur, horizon=horizon)
             out["slo_attainment"] = s["slo_attainment"]
             out["goodput_tok_s"] = s["goodput_tok_s"]
+            # good tokens / provisioned worker-seconds (goodput_tok_s is
+            # good tokens / duration, so multiply the duration back in)
+            out["goodput_tok_per_worker_s"] = \
+                s["goodput_tok_s"] * dur / max(ws, 1e-9)
             if isinstance(table, Mapping):
                 out["classes"] = s["classes"]
         return out

@@ -15,7 +15,7 @@ equivalent, so slowness and saturation trade off in the same unit.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.request import Request
 from repro.cluster.worker import Worker
@@ -57,8 +57,12 @@ class RoutingPolicy:
              max_new: int, urgency: float = 0.0) -> int:
         raise NotImplementedError
 
-    def note_step(self, i: int, dt: float):
-        """Observe one engine iteration of worker i (straggler tracking)."""
+    def note_step(self, name: str, dt: float):
+        """Observe one engine iteration of the named worker (straggler
+        tracking). Keyed by worker *name*, not pool index — autoscaling
+        mutates the pool, and an index-keyed EWMA would silently transfer a
+        retired worker's latency history to whichever replica inherited its
+        slot."""
 
 
 class RoundRobin(RoutingPolicy):
@@ -92,42 +96,47 @@ class MemoryAware(RoutingPolicy):
     router latency-averse for interactive requests (a deep queue is TTFT
     risk) while batch requests still pack by headroom.
 
-    Straggler accounting only covers workers that have actually stepped:
-    the EWMA list is sized to the pool with ``None`` for unobserved workers,
-    the fleet mean excludes them, and the first observation seeds the EWMA
-    directly. (The old lazily-grown list held 0.0 for never-stepped workers,
-    dragging the mean down — the first active workers were charged a
-    spurious warmup straggler penalty while workers beyond the list length
-    got 0.0 straggle for free.)"""
+    Straggler state is keyed by worker NAME so it survives pool mutation
+    (autoscaled fleets add and retire replicas mid-run; an index-keyed list
+    would hand a retiree's history to its slot's inheritor). Only observed
+    workers carry data: unobserved workers take no penalty and no reward,
+    and the fleet mean is computed over the *current pool's* observed
+    members — a long-retired straggler must not drag the reference mean."""
     straggler_penalty: float = 2.0
     ewma_alpha: float = 0.2
     urgency_weight: float = 1.0
 
     def __post_init__(self):
-        self._lat_ewma: List[Optional[float]] = []
+        self._lat_ewma: Dict[str, float] = {}
 
-    def _size_to(self, n: int):
-        while len(self._lat_ewma) < n:
-            self._lat_ewma.append(None)
-
-    def note_step(self, i: int, dt: float):
-        self._size_to(i + 1)
-        prev = self._lat_ewma[i]
+    def note_step(self, name: str, dt: float):
+        prev = self._lat_ewma.get(name)
         a = self.ewma_alpha
         # first observation seeds the EWMA (no bias toward zero at warmup)
-        self._lat_ewma[i] = dt if prev is None else (1 - a) * prev + a * dt
+        self._lat_ewma[name] = dt if prev is None else (1 - a) * prev + a * dt
 
-    def _straggle(self, i: int) -> float:
-        if i >= len(self._lat_ewma) or self._lat_ewma[i] is None:
+    def forget(self, name: str):
+        """Drop a retired worker's history (a future replica reusing the
+        name must not inherit a dead worker's straggle)."""
+        self._lat_ewma.pop(name, None)
+
+    def _straggle(self, name: str,
+                  pool: Optional[Sequence[str]] = None) -> float:
+        """Relative EWMA step latency of ``name`` among the observed members
+        of ``pool`` (default: every observed worker)."""
+        if name not in self._lat_ewma:
             return 0.0                   # unobserved: no data, no penalty
-        observed = [v for v in self._lat_ewma if v is not None]
+        names = list(pool) if pool is not None else list(self._lat_ewma)
+        observed = [self._lat_ewma[n] for n in names if n in self._lat_ewma]
+        if not observed:
+            return 0.0
         mean = sum(observed) / len(observed)
         if mean <= 0:
             return 0.0
-        return self._lat_ewma[i] / mean - 1.0
+        return self._lat_ewma[name] / mean - 1.0
 
     def pick(self, workers, prompt_len, max_new, urgency=0.0):
-        self._size_to(len(workers))
+        pool_names = [w.name for w in workers]
 
         def score(i):
             w = workers[i]
@@ -136,7 +145,9 @@ class MemoryAware(RoutingPolicy):
             frac = head / max(w.engine.alloc.n_pages, 1)
             queue_frac = w.queue_depth / max(w.engine.sched.cfg.max_num_seqs,
                                              1)
-            return (-frac + self.straggler_penalty * self._straggle(i)
+            return (-frac
+                    + self.straggler_penalty * self._straggle(w.name,
+                                                              pool_names)
                     + self.urgency_weight * urgency * queue_frac)
         return min(eligible_indices(workers, prompt_len, max_new), key=score)
 

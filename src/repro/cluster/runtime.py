@@ -21,6 +21,15 @@ Two serving modes:
 Open-loop arrivals: the runtime holds the trace and routes each request when
 the cluster clock reaches its arrival; engines additionally gate admission on
 `arrival > now` (no scheduler sees a request from the future).
+
+Elasticity: the pools are mutable mid-run. ``add_worker`` mints a replica
+that joins its pool only after a modeled cold start (weight-shard load into
+HBM, ``pm.weight_load_time``); ``retire_worker`` removes a replica from the
+route/dispatch pools immediately but lets its in-flight requests finish
+(graceful drain), stamping a decommission time so worker-second accounting
+stays honest. An attached ``AutoscaleController`` ticks on the virtual clock
+between fleet events; with no controller and no add/retire calls the event
+loop is bit-identical to the static path.
 """
 from __future__ import annotations
 
@@ -33,7 +42,8 @@ from repro.core import perf_model as pm
 from repro.core.admission import ClassPolicy
 from repro.core.request import Request
 from repro.cluster.arrivals import TraceEntry
-from repro.cluster.metrics import ClusterMetrics, MigrationRecord
+from repro.cluster.metrics import (ClusterMetrics, MigrationRecord,
+                                   ScalingEvent)
 from repro.cluster.policies import (DispatchPolicy, RoutingPolicy,
                                     make_dispatcher, make_policy)
 from repro.cluster.worker import Worker
@@ -52,7 +62,8 @@ class ClusterConfig:
 
 class ClusterRuntime:
     def __init__(self, workers: Sequence[Worker],
-                 cfg: Optional[ClusterConfig] = None):
+                 cfg: Optional[ClusterConfig] = None,
+                 autoscaler=None):
         if not workers:
             raise ValueError("cluster needs at least one worker")
         if not all(w.engine.virtual_clock for w in workers):
@@ -91,13 +102,16 @@ class ClusterRuntime:
         # rid an engine already issued before joining the cluster
         start = 1 + max((r for w in self.workers
                          for r in w.engine.issued_rids()), default=-1)
-        rid_source = itertools.count(start)
+        self._rid_source = itertools.count(start)
         for w in self.workers:
-            w.engine.adopt_rid_source(rid_source)
+            w.engine.adopt_rid_source(self._rid_source)
 
         self._arrivals: List = []          # (t, seq, TraceEntry) min-heap
         self._arr_seq = itertools.count()
         self._migrating: List[dict] = []   # in-flight KV transfers
+        self._warming: List[Worker] = []   # minted, weight load in progress
+        self._retire_requested: Dict[str, float] = {}
+        self.autoscaler = autoscaler       # optional AutoscaleController
         self._classes = ClassPolicy(priority=dict(self.cfg.class_priorities))
         self.submitted: List[Request] = []
         self.metrics = ClusterMetrics(self.workers, submitted=self.submitted)
@@ -134,8 +148,143 @@ class ClusterRuntime:
         for e in trace:
             self.submit(e.isl, e.osl, e.arrival, slo_class=e.slo_class)
 
+    # ------------------------------------------------------------- elasticity
+    def _role_pool(self, role: str) -> List[Worker]:
+        return {"prefill": self.prefill_pool, "decode": self.decode_pool,
+                "colocated": self.colocated_pool}[role]
+
+    def active_pool(self, role: str) -> List[Worker]:
+        """The routable/dispatchable replicas of a role — excludes warming
+        (weight load in progress) and draining workers. What a scaling
+        policy sizes."""
+        return list(self._role_pool(role))
+
+    def warming_count(self, role: str) -> int:
+        return sum(1 for w in self._warming if w.role == role)
+
+    def add_worker(self, worker: Worker, at: Optional[float] = None,
+                   cold_start_extra_s: float = 0.0) -> float:
+        """Mint a replica mid-run. The worker is provisioned (and paid for,
+        in worker-seconds) from ``at``, but joins its route/dispatch pool
+        only after the modeled cold start: weight-shard load into HBM
+        (``pm.weight_load_time``) plus ``cold_start_extra_s`` for checkpoint
+        fetch / container spin-up. Returns the pool-entry time."""
+        if any(w.name == worker.name for w in self.workers):
+            raise ValueError(f"worker name {worker.name!r} already in fleet")
+        if not worker.engine.virtual_clock:
+            raise ValueError("cluster co-simulation requires virtual-clock "
+                             "engines (SimRunner)")
+        if worker.role == "prefill" and not self.disaggregated:
+            raise ValueError("cannot add a prefill worker to a colocated "
+                             "fleet (no decode pool to migrate into)")
+        t = self.makespan if at is None else at
+        r = worker.engine.runner
+        load = pm.weight_load_time(worker.engine.cfg_model, r.plan, r.hw,
+                                   r.dtype_bytes) + cold_start_extra_s
+        worker.t_join = t
+        worker.t_active = t + load
+        worker.engine.adopt_rid_source(self._rid_source)
+        self.workers.append(worker)
+        self._warming.append(worker)
+        self.metrics.note_scaling(ScalingEvent(
+            t=t, kind="scale_up", worker=worker.name, role=worker.role,
+            pool_size=len(self._role_pool(worker.role))))
+        return worker.t_active
+
+    def retire_worker(self, worker: Optional[Worker] = None,
+                      role: str = "colocated",
+                      at: Optional[float] = None) -> Worker:
+        """Gracefully retire a replica: it leaves the route/dispatch pools
+        immediately (no new routes, dispatches or arrivals land on it) but
+        keeps stepping until its in-flight requests finish; the drain
+        completion stamps ``Worker.t_retire`` (never earlier than the
+        retirement request) so per-worker accounting stays honest. With no
+        explicit ``worker``, the emptiest replica of ``role`` is chosen
+        (fastest drain)."""
+        if worker is None:
+            pool = self._role_pool(role)
+            if not pool:
+                raise ValueError(f"no active {role!r} workers to retire")
+            worker = min(pool, key=lambda w: (w.queue_depth, w.kv_util()))
+        pool = self._role_pool(worker.role)
+        if worker not in pool:
+            raise ValueError(f"worker {worker.name!r} is not in the active "
+                             f"{worker.role!r} pool")
+        if pool is self.route_pool and len(pool) == 1:
+            raise ValueError("cannot retire the last routable worker")
+        if pool is self.decode_pool and self.disaggregated and len(pool) == 1:
+            raise ValueError("cannot retire the last decode worker of a "
+                             "disaggregated fleet (migrations would wedge)")
+        pool.remove(worker)
+        worker.draining = True
+        t = worker.engine.now if at is None else at
+        self._retire_requested[worker.name] = t
+        # an idle retiree has no drain to wait for: its clock may lag the
+        # fleet (idle engines only advance on work) — bring it to the
+        # decommission decision time before it goes dark
+        if not worker.engine.has_work:
+            worker.engine.advance_to(t)
+        self.metrics.note_scaling(ScalingEvent(
+            t=t, kind="retire", worker=worker.name, role=worker.role,
+            pool_size=len(pool)))
+        self._finish_retirements()
+        return worker
+
+    def _finish_retirements(self):
+        for w in self.workers:
+            if w.draining and w.t_retire is None and not w.engine.has_work:
+                w.t_retire = max(w.engine.now,
+                                 self._retire_requested.get(w.name, 0.0))
+                forget = getattr(self.policy, "forget", None)
+                if forget is not None:
+                    forget(w.name)     # a reused name must not inherit this
+                self.metrics.note_scaling(ScalingEvent(
+                    t=w.t_retire, kind="drained", worker=w.name, role=w.role,
+                    pool_size=len(self._role_pool(w.role))))
+
+    def _activate_warming(self, upto: float):
+        ready = sorted((w for w in self._warming
+                        if w.t_active <= upto + 1e-12),
+                       key=lambda w: w.t_active)
+        for w in ready:
+            self._warming.remove(w)
+            w.engine.advance_to(w.t_active)
+            pool = self._role_pool(w.role)
+            pool.append(w)
+            self.metrics.note_scaling(ScalingEvent(
+                t=w.t_active, kind="join", worker=w.name, role=w.role,
+                pool_size=len(pool)))
+
+    def _next_event_time(self) -> Optional[float]:
+        """Earliest upcoming fleet event of any kind — worker actions,
+        KV-transfer completions, unrouted arrivals, warming pool entries.
+        The controller ticks up to (never past) this time."""
+        ts = [t for t in (self._next_action_time(w) for w in self.workers)
+              if t is not None]
+        ts += [m["ready"] for m in self._migrating]
+        ts += [w.t_active for w in self._warming]
+        if self._arrivals:
+            ts.append(self._arrivals[0][0])
+        return min(ts, default=None)
+
+    def _autoscale_ticks(self):
+        """Fire every controller tick due before the fleet's next event, in
+        order, on the virtual clock. Signal observation reads fleet state
+        without advancing any engine clock, so a controller that takes no
+        action leaves the simulation bit-identical to the static path."""
+        a = self.autoscaler
+        while True:
+            ne = self._next_event_time()
+            if ne is None or a.next_tick is None or a.next_tick > ne:
+                return
+            t = a.next_tick
+            self._activate_warming(t)
+            a.tick(self, t)
+
     def run(self, max_steps: int = 10 ** 7) -> ClusterMetrics:
         for _ in range(max_steps):
+            if self.autoscaler is not None:
+                self._autoscale_ticks()
             self._deliver_migrations()
             self._route_arrivals()
             w = self._next_worker()
@@ -164,10 +313,11 @@ class ClusterRuntime:
             t0 = w.engine.now
             w.engine.step()
             if w in self.route_pool:
-                self.policy.note_step(self.route_pool.index(w),
-                                      w.engine.now - t0)
+                self.policy.note_step(w.name, w.engine.now - t0)
             if w.role == "prefill":
                 self._harvest_prefill_complete(w)
+            if w.draining:
+                self._finish_retirements()
         # stamp the fleet makespan so summaries use the true serving window
         # and can count still-in-flight requests as SLO misses
         self.metrics.t_end = self.makespan
@@ -204,6 +354,10 @@ class ClusterRuntime:
             if horizon is not None and t > horizon:
                 break                  # the future: in-flight work acts first
             _, _, entry = heapq.heappop(self._arrivals)
+            if self._warming:
+                # replicas whose cold start completed by this arrival are
+                # routable for it
+                self._activate_warming(entry.arrival)
             i = self.policy.pick(
                 self.route_pool, entry.isl, entry.osl,
                 urgency=self._classes.normalized_urgency(entry.slo_class))

@@ -15,6 +15,7 @@ router and the admission controller agree about saturation.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
@@ -25,18 +26,42 @@ from repro.core.runner import SimRunner
 
 ROLES = ("colocated", "prefill", "decode")
 
+# auto-name sequence for unnamed workers: a module-level monotonic counter.
+# (The old id(engine)&0xffff scheme could collide after GC id-reuse — and
+# did, once the autoscaler minted workers in a loop — tripping the runtime's
+# unique-name check.)
+_WORKER_SEQ = itertools.count()
+
 
 @dataclasses.dataclass
 class Worker:
     engine: InferenceEngine
     role: str = "colocated"
     name: str = ""
+    # elasticity lifecycle (static fleets keep the zero-defaults):
+    #   t_join   — when the replica was minted (autoscale decision time; the
+    #              worker-second meter starts here — cold start is paid for)
+    #   t_active — when it entered the route/dispatch pools (join + weight
+    #              load); equals t_join for workers present at t=0
+    #   t_retire — decommission stamp once a drained retiree goes dark
+    #   draining — retired from the pools, finishing its in-flight requests
+    t_join: float = 0.0
+    t_active: float = 0.0
+    t_retire: Optional[float] = None
+    draining: bool = False
 
     def __post_init__(self):
         if self.role not in ROLES:
             raise ValueError(f"unknown worker role {self.role!r}")
         if not self.name:
-            self.name = f"{self.role}-{id(self.engine) & 0xffff:04x}"
+            self.name = f"{self.role}-{next(_WORKER_SEQ):04d}"
+
+    def active_window(self, t_end: float, t0: float = 0.0) -> float:
+        """Seconds this worker was provisioned within [t0, t_end] — the
+        per-worker slice of the fleet's worker-second cost (cold start
+        included: the meter runs from minting, not from pool entry)."""
+        end = self.t_retire if self.t_retire is not None else t_end
+        return max(min(end, t_end) - max(self.t_join, t0), 0.0)
 
     # ------------------------------------------------------------ state views
     @property

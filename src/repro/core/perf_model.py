@@ -213,6 +213,19 @@ def pp_transport_time(cfg: ModelConfig, tokens: int, plan: ParallelismPlan,
     return (plan.pp - 1) * tokens * cfg.d_model * dtype_bytes / bw
 
 
+def weight_load_time(cfg: ModelConfig, plan: ParallelismPlan, hw: Hardware,
+                     dtype_bytes: int = 2) -> float:
+    """Cold-start cost of minting a replica: stream each device's weight
+    shard into HBM at achievable bandwidth. This is the ingest *lower bound*
+    (weights already staged host-side); container pull / checkpoint fetch are
+    workload-dependent and modeled separately (the autoscaler's
+    ``cold_start_extra_s``). TP/PP shard the weights, so deeper slicing
+    loads faster per device — another face of the DP weight-replication tax
+    (Obs 3)."""
+    return weight_bytes(cfg, dtype_bytes) \
+        / (plan.tp * plan.pp * hw.hbm_bw * hw.bw_eff)
+
+
 def kv_transfer_time(cfg: ModelConfig, context_tokens: int, hw: Hardware,
                      cache_dtype_bytes: int = 2, n_seqs: int = 1) -> float:
     """Prefill→decode migration cost in a disaggregated deployment: ship the

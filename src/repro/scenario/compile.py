@@ -77,8 +77,8 @@ def aggregate_plan(sc: Scenario) -> pm.ParallelismPlan:
 
 # -------------------------------------------------------------------- trace
 def _process(sc: Scenario):
-    from repro.cluster.arrivals import (GammaProcess, PoissonProcess,
-                                        TraceProcess)
+    from repro.cluster.arrivals import (GammaProcess, PiecewiseRateProcess,
+                                        PoissonProcess, TraceProcess)
     t = sc.traffic
     if t.process == "closed":
         return TraceProcess((0.0,) * t.n_requests)
@@ -86,6 +86,8 @@ def _process(sc: Scenario):
         return PoissonProcess(rate=t.rate)
     if t.process == "gamma":
         return GammaProcess(rate=t.rate, cv=t.cv)
+    if t.process == "piecewise":
+        return PiecewiseRateProcess(phases=t.phases)
     return TraceProcess(t.arrivals)
 
 
@@ -192,7 +194,11 @@ def to_engine(sc: Scenario, group: int = 0) -> InferenceEngine:
 # -------------------------------------------------------- fidelity 3: cluster
 def to_cluster(sc: Scenario):
     """The full fleet: every worker of every group, wired to the scenario's
-    routing/dispatch policies and KV-transfer wire format."""
+    routing/dispatch policies and KV-transfer wire format. A spec with an
+    ``autoscaler`` gets an ``AutoscaleController`` whose worker factory mints
+    replicas from the scaled role's (resolved) group — same capacity, same
+    admission, fresh monotonic names continuing the group's numbering."""
+    from repro.cluster.autoscale import make_autoscaler
     from repro.cluster.runtime import ClusterConfig, ClusterRuntime
     r = resolve(sc)
     workers = []
@@ -203,4 +209,15 @@ def to_cluster(sc: Scenario):
     ccfg = ClusterConfig(policy=sc.routing, dispatcher=sc.dispatch,
                          transfer_dtype_bytes=sc.transfer_dtype_bytes,
                          class_priorities=sc.class_priorities())
-    return ClusterRuntime(workers, ccfg)
+    autoscaler = None
+    if sc.autoscaler is not None:
+        a = sc.autoscaler
+        rg = next(g for g in r.groups if g.group.role == a.role)
+        prefix = rg.group.prefix or rg.group.role
+        seq = iter(range(rg.group.count, 10 ** 9))
+
+        def factory(r=r, rg=rg, prefix=prefix, seq=seq):
+            return _build_worker(r, rg, name=f"{prefix}{next(seq)}")
+
+        autoscaler = make_autoscaler(a, factory, slo=sc.slo())
+    return ClusterRuntime(workers, ccfg, autoscaler=autoscaler)

@@ -35,7 +35,9 @@ WORKLOADS: Dict[str, WorkloadSpec] = {
     "long_reasoning": LONG_REASONING,
 }
 
-PROCESSES = ("closed", "poisson", "gamma", "trace")
+PROCESSES = ("closed", "poisson", "gamma", "trace", "piecewise")
+
+AUTOSCALE_POLICIES = ("target_utilization", "slo_guard")
 
 
 def register_hardware(name: str, hw: pm.Hardware):
@@ -108,8 +110,11 @@ class Traffic:
 
     ``closed`` submits everything at t=0 (the pre-cluster benchmark mode);
     ``poisson``/``gamma`` are open-loop; ``trace`` replays explicit arrival
-    times. The same ``seed`` always draws the same request lengths, so fleets
-    compared under different processes see identical work.
+    times; ``piecewise`` is a nonhomogeneous Poisson process with a
+    piecewise-constant rate (``phases`` = (duration_s, rate) segments — the
+    diurnal/bursty traffic autoscaling exists for). The same ``seed`` always
+    draws the same request lengths, so fleets compared under different
+    processes see identical work.
 
     ``class_mix`` is the multi-tenant traffic split: (SLO-class name, weight)
     pairs; each request in the compiled trace is deterministically tagged
@@ -121,6 +126,7 @@ class Traffic:
     rate: float = 0.0             # req/s (poisson | gamma)
     cv: float = 2.0               # gamma burstiness (cv=1 is Poisson)
     arrivals: Tuple[float, ...] = ()   # explicit times (trace)
+    phases: Tuple[Tuple[float, float], ...] = ()  # (duration_s, rate) segs
     workload: str = "reasoning"
     n_requests: int = 150
     osl_cap: Optional[int] = None
@@ -137,6 +143,18 @@ class Traffic:
         if self.process == "trace" and len(self.arrivals) < self.n_requests:
             raise ValueError(f"trace has {len(self.arrivals)} arrivals, "
                              f"need {self.n_requests}")
+        phases = tuple((float(d), float(r)) for d, r in self.phases)
+        object.__setattr__(self, "phases", phases)
+        if self.process == "piecewise":
+            if not phases:
+                raise ValueError("piecewise traffic needs at least one "
+                                 "(duration_s, rate) phase")
+            if any(d <= 0 for d, _ in phases) or any(r < 0 for _, r in phases):
+                raise ValueError(f"piecewise phases need duration > 0 and "
+                                 f"rate >= 0: {phases}")
+            if all(r == 0 for _, r in phases):
+                raise ValueError("piecewise traffic needs at least one "
+                                 "phase with rate > 0")
         mix = tuple((str(n), float(w)) for n, w in self.class_mix)
         if any(w <= 0 for _, w in mix):
             raise ValueError(f"class_mix weights must be positive: {mix}")
@@ -165,6 +183,59 @@ class SLOClass:
         return SLO(ttft_s=self.ttft_s, tpot_s=self.tpot_s)
 
 
+@dataclasses.dataclass(frozen=True)
+class Autoscaler:
+    """Elastic sizing for one fleet role (``repro.cluster.autoscale``).
+
+    The named ``role``'s WorkerGroup ``count`` becomes the *initial* pool
+    size; the controller then holds the provisioned count (active + warming)
+    inside [``min_workers``, ``max_workers``], deciding every ``tick_s``
+    seconds of fleet time with ``cooldown_s`` between actions. New replicas
+    pay the modeled weight-load cold start plus ``cold_start_extra_s``
+    (checkpoint fetch / container spin-up) before serving.
+
+    Policy knobs: ``target_utilization`` tracks ``target_kv_util`` inside a
+    ``band`` hysteresis; ``slo_guard`` scales up when attainment drops below
+    ``attain_floor`` (or KV utilization passes ``util_ceiling``) and down
+    only below ``scale_down_util``."""
+    policy: str = "target_utilization"
+    role: str = "colocated"
+    min_workers: int = 1
+    max_workers: int = 8
+    tick_s: float = 2.0
+    cooldown_s: float = 10.0
+    target_kv_util: float = 0.60
+    band: float = 0.15
+    attain_floor: float = 0.90
+    util_ceiling: float = 0.85
+    scale_down_util: float = 0.35
+    surge_ratio: float = 1.5      # fast/slow arrival-rate ratio that counts
+                                  # as a load surge (slo_guard feedforward)
+    ewma_alpha: float = 0.4
+    cold_start_extra_s: float = 0.0
+
+    def __post_init__(self):
+        if self.policy not in AUTOSCALE_POLICIES:
+            raise ValueError(f"unknown autoscale policy {self.policy!r} "
+                             f"(have {AUTOSCALE_POLICIES})")
+        if self.role not in ROLES:
+            raise ValueError(f"unknown role {self.role!r} (have {ROLES})")
+        if self.min_workers < 1 or self.max_workers < self.min_workers:
+            raise ValueError(f"need 1 <= min_workers <= max_workers, got "
+                             f"[{self.min_workers}, {self.max_workers}]")
+        if self.tick_s <= 0:
+            raise ValueError(f"tick_s must be > 0, got {self.tick_s}")
+        if self.cooldown_s < 0:
+            raise ValueError(f"cooldown_s must be >= 0, got "
+                             f"{self.cooldown_s}")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(f"ewma_alpha must be in (0, 1], got "
+                             f"{self.ewma_alpha}")
+        if self.cold_start_extra_s < 0:
+            raise ValueError(f"cold_start_extra_s must be >= 0, got "
+                             f"{self.cold_start_extra_s}")
+
+
 # ------------------------------------------------------------------ scenario
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -178,6 +249,7 @@ class Scenario:
     transfer_dtype_bytes: int = 2        # KV wire format for migration
     class_kv_headroom: float = 0.0       # pool fraction only the top-urgency
                                          # SLO class may use (tier slice)
+    autoscaler: Optional["Autoscaler"] = None  # elastic sizing (one role)
     notes: str = ""
 
     def __post_init__(self):
@@ -204,6 +276,26 @@ class Scenario:
             raise ValueError(
                 f"traffic class_mix names {unknown} have no SLOClass in "
                 f"scenario {self.name!r} (have {sorted(known)})")
+        if isinstance(self.autoscaler, dict):
+            object.__setattr__(self, "autoscaler",
+                               Autoscaler(**self.autoscaler))
+        if self.autoscaler is not None:
+            a = self.autoscaler
+            grp = [g for g in self.fleet if g.role == a.role]
+            if not grp:
+                raise ValueError(
+                    f"autoscaler targets role {a.role!r} but the fleet has "
+                    f"no such group (roles: {sorted(roles)})")
+            if len(grp) > 1:
+                raise ValueError(
+                    f"autoscaler targets role {a.role!r} but {len(grp)} "
+                    f"groups share it — minted replicas would be ambiguous; "
+                    f"use a single group for the scaled role")
+            n0 = grp[0].count
+            if not a.min_workers <= n0 <= a.max_workers:
+                raise ValueError(
+                    f"initial {a.role} count {n0} outside autoscaler bounds "
+                    f"[{a.min_workers}, {a.max_workers}]")
 
     # ------------------------------------------------------------ properties
     @property
@@ -247,6 +339,8 @@ class Scenario:
         d["fleet"] = tuple(WorkerGroup(**g) for g in d["fleet"])
         d["traffic"] = Traffic(**d.get("traffic", {}))
         d["slos"] = tuple(SLOClass(**s) for s in d.get("slos", ()))
+        if d.get("autoscaler") is not None:
+            d["autoscaler"] = Autoscaler(**d["autoscaler"])
         return cls(**d)
 
     def to_json(self, **kw) -> str:

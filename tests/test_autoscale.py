@@ -1,0 +1,355 @@
+"""Elastic autoscaling: arrival-process validation, piecewise-rate traffic,
+trace persistence, worker lifecycle (cold start / graceful drain),
+controller behaviour, worker-second accounting, and static-path identity."""
+import dataclasses
+
+import pytest
+
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.core import perf_model as pm
+from repro.cluster import (AutoscaleController, ClusterConfig, ClusterRuntime,
+                           GammaProcess, PiecewiseRateProcess, PoissonProcess,
+                           ScalingSignals, SLOGuard, TargetUtilization,
+                           TraceEntry, TraceProcess, load_trace, make_trace,
+                           make_sim_worker, save_trace)
+from repro.data.reasoning import REASONING
+
+CFG = DS_DISTILL_8B
+PLAN = pm.ParallelismPlan()
+
+
+def _worker(name="", role="colocated", n_pages=3000, max_seqs=64):
+    return make_sim_worker(CFG, PLAN, role=role, name=name, n_pages=n_pages,
+                           max_seqs=max_seqs)
+
+
+# -------------------------------------------------- arrival-process validation
+@pytest.mark.parametrize("rate", [0.0, -1.0])
+def test_poisson_rejects_nonpositive_rate(rate):
+    with pytest.raises(ValueError, match="rate > 0"):
+        PoissonProcess(rate=rate)
+
+
+@pytest.mark.parametrize("kw", [dict(rate=0.0), dict(rate=-2.0),
+                                dict(rate=1.0, cv=0.0),
+                                dict(rate=1.0, cv=-0.5)])
+def test_gamma_rejects_nonpositive_params(kw):
+    with pytest.raises(ValueError):
+        GammaProcess(**kw)
+
+
+# ------------------------------------------------------- piecewise-rate process
+def test_piecewise_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        PiecewiseRateProcess(phases=())
+    with pytest.raises(ValueError, match="durations"):
+        PiecewiseRateProcess(phases=((0.0, 5.0),))
+    with pytest.raises(ValueError, match="durations"):
+        PiecewiseRateProcess(phases=((10.0, 5.0), (-1.0, 2.0)))
+    with pytest.raises(ValueError, match="rates"):
+        PiecewiseRateProcess(phases=((10.0, -5.0),))
+    with pytest.raises(ValueError, match="rate > 0"):
+        PiecewiseRateProcess(phases=((10.0, 0.0), (5.0, 0.0)))
+
+
+def test_piecewise_rate_at():
+    p = PiecewiseRateProcess(phases=((10.0, 2.0), (5.0, 8.0)), repeat=True)
+    assert p.rate_at(0.0) == 2.0
+    assert p.rate_at(9.99) == 2.0
+    assert p.rate_at(10.0) == 8.0
+    assert p.rate_at(14.9) == 8.0
+    assert p.rate_at(15.0) == 2.0          # cycles
+    assert p.rate_at(25.0) == 8.0
+    q = PiecewiseRateProcess(phases=((10.0, 2.0), (5.0, 8.0)), repeat=False)
+    assert q.rate_at(100.0) == 8.0         # last phase extends forever
+
+
+def test_piecewise_times_monotone_and_deterministic():
+    p = PiecewiseRateProcess(phases=((10.0, 1.0), (10.0, 10.0)))
+    ts = p.times(100, seed=3)
+    assert ts == sorted(ts)
+    assert len(ts) == 100
+    assert ts == p.times(100, seed=3)      # same seed, same trace
+    assert ts != p.times(100, seed=4)
+
+
+def test_piecewise_density_tracks_rate():
+    """Arrivals concentrate in high-rate phases: the 10x phase of a repeating
+    (low, high) schedule should hold the vast majority of arrivals."""
+    p = PiecewiseRateProcess(phases=((10.0, 0.5), (10.0, 10.0)))
+    ts = p.times(400, seed=0)
+    in_high = sum(1 for t in ts if (t % 20.0) >= 10.0)
+    # expected share ~ 10/(10+0.5) = 95%
+    assert in_high / len(ts) > 0.85
+
+
+def test_piecewise_zero_rate_phase_is_a_gap():
+    p = PiecewiseRateProcess(phases=((5.0, 4.0), (5.0, 0.0)))
+    ts = p.times(200, seed=1)
+    assert all((t % 10.0) < 5.0 for t in ts)   # nothing lands in the gap
+
+
+def test_piecewise_nonrepeat_zero_tail_raises():
+    p = PiecewiseRateProcess(phases=((1.0, 5.0), (1.0, 0.0)), repeat=False)
+    with pytest.raises(ValueError, match="rate 0"):
+        p.times(1000, seed=0)
+
+
+# --------------------------------------------------------- trace persistence
+def test_save_load_trace_roundtrip(tmp_path):
+    trace = make_trace(PoissonProcess(rate=5.0), REASONING, 20, seed=7,
+                       osl_cap=300)
+    trace = [dataclasses.replace(e, slo_class="interactive" if i % 2 else "")
+             for i, e in enumerate(trace)]
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, trace)
+    back = load_trace(path)
+    assert back == trace                   # arrival, isl, osl AND slo_class
+
+
+def test_trace_process_short_trace_raises():
+    with pytest.raises(ValueError, match="need 5"):
+        TraceProcess([0.0, 1.0, 2.0]).times(5)
+
+
+# ------------------------------------------------------------ worker naming
+def test_worker_auto_names_unique():
+    """Regression: auto-names derived from id(engine) collided after GC
+    reused object ids (the autoscaler mints workers in a loop); the monotonic
+    counter cannot."""
+    names = [_worker().name for _ in range(64)]
+    assert len(set(names)) == len(names)
+    rt_names = [_worker(role="decode").name for _ in range(8)]
+    assert all(n.startswith("decode-") for n in rt_names)
+
+
+# ------------------------------------------------------- add/retire lifecycle
+def test_add_worker_pays_cold_start():
+    rt = ClusterRuntime([_worker("co0"), _worker("co1")], ClusterConfig())
+    w = _worker("co2")
+    t_active = rt.add_worker(w, at=5.0, cold_start_extra_s=2.0)
+    load = pm.weight_load_time(CFG, PLAN, pm.H200, 2)
+    assert t_active == pytest.approx(5.0 + load + 2.0)
+    assert w.t_join == 5.0 and w.t_active == t_active
+    # warming, not yet routable
+    assert w not in rt.colocated_pool
+    assert rt.warming_count("colocated") == 1
+    rt._activate_warming(t_active)
+    assert w in rt.colocated_pool and rt.warming_count("colocated") == 0
+    assert w.engine.now == pytest.approx(t_active)
+
+
+def test_add_worker_rejects_duplicate_name_and_bad_role():
+    rt = ClusterRuntime([_worker("co0")], ClusterConfig())
+    with pytest.raises(ValueError, match="already in fleet"):
+        rt.add_worker(_worker("co0"))
+    with pytest.raises(ValueError, match="colocated fleet"):
+        rt.add_worker(_worker("p0", role="prefill"))
+
+
+def test_retire_worker_graceful_drain():
+    ws = [_worker("co0"), _worker("co1")]
+    rt = ClusterRuntime(ws, ClusterConfig())
+    # load one request onto each worker, then retire co1 mid-flight
+    rt.submit(100, 50, arrival=0.0)
+    rt.submit(100, 50, arrival=0.0)
+    rt._route_arrivals()
+    assert all(w.has_work for w in ws)
+    victim = rt.retire_worker(worker=ws[1], at=0.5)
+    assert victim is ws[1]
+    assert victim not in rt.colocated_pool      # unroutable immediately
+    assert victim.draining and victim.t_retire is None   # still draining
+    rt.run()
+    assert victim.t_retire is not None
+    assert victim.t_retire >= 0.5               # never before the request
+    # its in-flight request finished (graceful, not dropped)
+    assert len(victim.engine.metrics.finished) == 1
+
+
+def test_retire_last_routable_worker_refused():
+    rt = ClusterRuntime([_worker("co0")], ClusterConfig())
+    with pytest.raises(ValueError, match="last routable"):
+        rt.retire_worker(role="colocated")
+
+
+def test_retire_idle_worker_charges_to_decision_time():
+    """An idle retiree's clock lags the fleet; decommission must stamp the
+    decision time, not the stale engine clock (worker-seconds would otherwise
+    be undercounted)."""
+    rt = ClusterRuntime([_worker("co0"), _worker("co1")], ClusterConfig())
+    w = rt.retire_worker(worker=rt.workers[1], at=7.0)
+    assert w.t_retire == pytest.approx(7.0)
+    assert w.active_window(100.0) == pytest.approx(7.0)
+
+
+# ----------------------------------------------------------- scaling signals
+def test_signals_ewma_holds_on_none():
+    s = ScalingSignals(ewma_alpha=0.5)
+    s.observe(kv_util=0.8, attainment=1.0, arrival_rate=2.0)
+    s.observe(kv_util=0.4, attainment=None, arrival_rate=2.0)
+    assert s.kv_util == pytest.approx(0.6)
+    assert s.slo_attainment == pytest.approx(1.0)   # held, not decayed
+
+
+def test_signals_surge_needs_warmup():
+    s = ScalingSignals(ewma_alpha=0.8, warmup_ticks=4)
+    s.observe(arrival_rate=5.0)            # noisy first sample
+    s.observe(arrival_rate=1.0)
+    assert s.surge_ratio() == 1.0          # still warming up: no surge
+    s.observe(arrival_rate=1.0)
+    s.observe(arrival_rate=1.0)
+    # warmup baseline is the arithmetic mean (2.0), not an EWMA anchored on
+    # the noisy first sample
+    assert s.arrival_rate_slow == pytest.approx(2.0)
+    s.observe(arrival_rate=10.0)
+    assert s.surge_ratio() > 2.0           # warmed up: the step is visible
+
+
+def test_target_utilization_hysteresis():
+    pol = TargetUtilization(target=0.6, band=0.15)
+    s = ScalingSignals()
+    s.kv_util, s.queue_depth = 0.6, 0.0
+    assert pol.desired_delta(s, 2) == 0    # inside the band: hold
+    s.kv_util = 0.8
+    assert pol.desired_delta(s, 2) == 1
+    s.kv_util = 0.97
+    assert pol.desired_delta(s, 2) == 2    # saturation imminent: two steps
+    s.kv_util = 0.3
+    assert pol.desired_delta(s, 2) == -1
+    s.queue_depth = 5.0                    # backlog blocks scale-down
+    assert pol.desired_delta(s, 2) == 2
+
+
+def test_slo_guard_asymmetry():
+    pol = SLOGuard(attain_floor=0.9, scale_down_util=0.35)
+    s = ScalingSignals()
+    s.slo_attainment, s.kv_util, s.queue_depth = 0.7, 0.5, 0.0
+    assert pol.desired_delta(s, 2) >= 1    # attainment hurt: scale up
+    s.slo_attainment = 0.95
+    assert pol.desired_delta(s, 2) == 0    # safe but not idle: hold
+    s.kv_util = 0.2
+    assert pol.desired_delta(s, 2) == -1   # safe AND idle: shrink
+
+
+# ------------------------------------------------------- controller end-to-end
+def _controller_runtime(policy, *, n0=1, min_w=1, max_w=4, tick_s=0.5,
+                        cooldown_s=1.0, ewma_alpha=0.7):
+    seq = iter(range(n0, 100))
+
+    def factory():
+        return _worker(f"el{next(seq)}")
+
+    ctl = AutoscaleController(
+        policy, factory, role="colocated", min_workers=min_w,
+        max_workers=max_w, tick_s=tick_s, cooldown_s=cooldown_s,
+        ewma_alpha=ewma_alpha)
+    rt = ClusterRuntime([_worker(f"el{i}") for i in range(n0)],
+                        ClusterConfig(), autoscaler=ctl)
+    return rt, ctl
+
+
+def test_controller_grows_and_shrinks_under_piecewise_load():
+    proc = PiecewiseRateProcess(phases=((6.0, 0.5), (6.0, 10.0), (12.0, 0.3)),
+                                repeat=False)
+    trace = make_trace(proc, REASONING, 50, seed=5, osl_cap=200)
+    rt, ctl = _controller_runtime(SLOGuard(attain_floor=0.9), n0=1,
+                                  max_w=4)
+    rt.submit_trace(trace)
+    m = rt.run()
+    kinds = [e.kind for e in m.scaling_events]
+    assert "scale_up" in kinds             # grew into the peak
+    assert "retire" in kinds               # shrank back after it
+    peak_pool = max(e.pool_size for e in m.scaling_events
+                    if e.kind == "join")
+    assert peak_pool <= 4                  # bounds respected
+    assert len(rt.colocated_pool) >= 1     # never below min
+    assert m.summary()["n_finished"] == 50
+
+
+def test_controller_bounds_and_cooldown():
+    rt, ctl = _controller_runtime(TargetUtilization(), n0=2, min_w=2, max_w=3,
+                                  cooldown_s=100.0)
+    # force a scale-up decision every tick: utilization pinned high
+    ctl.signals.kv_util = 0.99
+    ctl.signals.queue_depth = 50.0
+    ctl.tick(rt, 1.0)
+    assert len(rt.workers) == 3            # clamped to max_workers
+    ctl.signals.kv_util = 0.99
+    ctl.tick(rt, 2.0)
+    assert len(rt.workers) == 3            # at the bound
+    # now force scale-down: cooldown (100s) must block it
+    rt._activate_warming(10.0)
+    ctl.signals.kv_util = 0.01
+    ctl.signals.queue_depth = 0.0
+    ctl.signals.slo_attainment = 1.0
+    ctl.tick(rt, 10.0)
+    assert len(rt.colocated_pool) == 3     # cooldown held
+    ctl.tick(rt, 200.0)
+    assert len(rt.colocated_pool) == 2     # cooldown expired; min respected
+
+
+def test_controller_observation_is_read_only():
+    """A tick that takes no action must not advance any engine clock — the
+    no-op-controller run must stay bit-identical to the static path."""
+    rt, ctl = _controller_runtime(SLOGuard(), n0=2, min_w=2, max_w=2)
+    rt.submit(200, 50, arrival=0.0)
+    rt._route_arrivals()
+    clocks = [w.engine.now for w in rt.workers]
+    ctl.tick(rt, 0.25)
+    assert [w.engine.now for w in rt.workers] == clocks
+    assert len(rt.workers) == 2
+
+
+# -------------------------------------------------- worker-second accounting
+def test_worker_seconds_static_fleet():
+    ws = [_worker("co0"), _worker("co1")]
+    rt = ClusterRuntime(ws, ClusterConfig())
+    rt.submit_trace(make_trace(PoissonProcess(rate=4.0), REASONING, 10,
+                               seed=2, osl_cap=150))
+    m = rt.run()
+    s = m.summary()
+    # a static fleet is provisioned wall-to-wall: n_workers * duration
+    assert s["worker_seconds"] == pytest.approx(2 * s["duration_s"])
+    assert s["throughput_tok_per_worker_s"] == pytest.approx(
+        s["throughput_tok_s"] / 2)
+
+
+def test_worker_seconds_elastic_fleet_charges_partial_windows():
+    ws = [_worker("co0"), _worker("co1")]
+    rt = ClusterRuntime(ws, ClusterConfig())
+    rt.submit_trace(make_trace(PoissonProcess(rate=4.0), REASONING, 10,
+                               seed=2, osl_cap=150))
+    w2 = _worker("co2")
+    rt.add_worker(w2, at=1.0)
+    m = rt.run()
+    s = m.summary()
+    t0 = min(r.arrival for r in rt.submitted)
+    end = m.t_end
+    # co2 joined at t=1: its window runs 1 -> makespan, not t0 -> makespan
+    assert s["worker_seconds"] == pytest.approx(2 * (end - t0) + (end - 1.0))
+    assert s["workers"]["co2"]["t_join"] == 1.0
+
+
+# ----------------------------------------------------- static-path identity
+def test_noop_autoscaler_is_bit_identical_to_static():
+    """min == max == initial count: the controller observes every tick but
+    can never act — the run must be indistinguishable from autoscaler=None
+    (the acceptance bar for threading elasticity through the event loop)."""
+    trace = make_trace(PoissonProcess(rate=6.0), REASONING, 30, seed=9,
+                       osl_cap=200)
+
+    def run(with_ctl):
+        ws = [_worker(f"s{i}") for i in range(2)]
+        ctl = None
+        if with_ctl:
+            ctl = AutoscaleController(
+                SLOGuard(), lambda: _worker("never"), role="colocated",
+                min_workers=2, max_workers=2, tick_s=0.5)
+        rt = ClusterRuntime(ws, ClusterConfig(), autoscaler=ctl)
+        rt.submit_trace(trace)
+        m = rt.run()
+        s = m.summary()
+        s.pop("n_scaling_events")
+        return s
+
+    assert run(False) == run(True)

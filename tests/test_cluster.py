@@ -165,31 +165,29 @@ def test_migrated_timestamps_monotone():
 
 # ------------------------------------------------------------------ policies
 def test_memory_aware_warmup_no_spurious_straggle():
-    """Regression: the lazily-grown EWMA list held 0.0 for workers that never
-    stepped, dragging the fleet mean down — the first active worker was
-    charged a straggler penalty at warmup while never-stepped workers beyond
-    the list length got 0.0 straggle for free."""
+    """Regression: the lazily-grown EWMA table held 0.0 for workers that
+    never stepped, dragging the fleet mean down — the first active worker was
+    charged a straggler penalty at warmup while never-stepped workers got 0.0
+    straggle for free."""
     pol = MemoryAware()
     for _ in range(3):
-        pol.note_step(1, 0.010)
+        pol.note_step("co1", 0.010)
     # the sole observed worker IS the fleet mean: zero straggle, not +1.0
-    assert pol._straggle(1) == pytest.approx(0.0)
+    assert pol._straggle("co1") == pytest.approx(0.0)
     # unobserved workers have no data — no reward (was -1.0), no penalty
-    assert pol._straggle(0) == 0.0
-    assert pol._straggle(2) == 0.0
+    assert pol._straggle("co0") == 0.0
+    assert pol._straggle("co2") == 0.0
     # the first observation seeds the EWMA (no bias toward zero at warmup)
     pol2 = MemoryAware(ewma_alpha=0.2)
-    pol2.note_step(0, 0.040)
-    assert pol2._lat_ewma[0] == pytest.approx(0.040)
+    pol2.note_step("co0", 0.040)
+    assert pol2._lat_ewma["co0"] == pytest.approx(0.040)
     # and warmup must not skew routing: equal-headroom fleet, only worker 0
     # observed — the pick must not avoid (or favour) it for straggle reasons
     ws = _workers("colocated", n=3)
     pol3 = MemoryAware()
-    pol3.note_step(0, 0.020)
-    assert len(pol3._lat_ewma) < 3
+    pol3.note_step("co0", 0.020)
     pol3.pick(ws, 100, 400)
-    assert len(pol3._lat_ewma) == 3      # sized to the pool, None-padded
-    assert pol3._straggle(0) == pytest.approx(0.0)
+    assert pol3._straggle("co0", [w.name for w in ws]) == pytest.approx(0.0)
 
 
 def test_memory_aware_straggler_penalty_is_scalar():
@@ -200,13 +198,33 @@ def test_memory_aware_straggler_penalty_is_scalar():
     pol = MemoryAware(straggler_penalty=2.0, ewma_alpha=0.2)
     # equal headroom; replica 0 is 5x slower per step
     for _ in range(20):
-        pol.note_step(0, 0.050)
-        pol.note_step(1, 0.010)
+        pol.note_step("co0", 0.050)
+        pol.note_step("co1", 0.010)
     assert pol.pick(ws, 100, 400) == 1
     # and the penalty folds into ONE scalar: a slightly fuller fast replica
     # still beats a much slower emptier one
     ws[1].engine.alloc.grow(999, 16 * 40)      # shrink replica 1's headroom
     assert pol.pick(ws, 100, 400) == 1
+
+
+def test_memory_aware_straggle_keyed_by_name_survives_pool_mutation():
+    """Autoscaling mutates the pool mid-run: a retired worker's latency
+    history must not transfer to whichever replica inherits its slot, and
+    the fleet mean must be computed over the *current* pool's observed
+    members — a long-retired straggler must not drag the reference mean."""
+    pol = MemoryAware()
+    for _ in range(5):
+        pol.note_step("co0", 0.050)       # straggler
+        pol.note_step("co1", 0.010)
+        pol.note_step("co2", 0.010)
+    # co0 retires: current pool excludes it — co1/co2 are mutually average
+    assert pol._straggle("co1", ["co1", "co2"]) == pytest.approx(0.0)
+    # with co0 in the pool, co1 is faster than the mean (negative straggle)
+    assert pol._straggle("co1", ["co0", "co1", "co2"]) < 0
+    pol.forget("co0")
+    assert "co0" not in pol._lat_ewma
+    # a fresh replica reusing the name starts with no history
+    assert pol._straggle("co0", ["co0", "co1", "co2"]) == 0.0
 
 
 def test_dispatcher_least_headroom_best_fit():

@@ -5,9 +5,10 @@ import json
 import pytest
 
 from repro.core import perf_model as pm
-from repro.scenario import (SCENARIOS, ModelRef, Scenario, SLOClass, Traffic,
-                            WorkerGroup, estimate_fleet, get_scenario,
-                            planner_workload, requests, resolve, trace)
+from repro.scenario import (SCENARIOS, Autoscaler, ModelRef, Scenario,
+                            SLOClass, Traffic, WorkerGroup, estimate_fleet,
+                            get_scenario, planner_workload, requests, resolve,
+                            trace)
 
 
 def _rich_scenario() -> Scenario:
@@ -30,6 +31,9 @@ def _rich_scenario() -> Scenario:
               SLOClass("batch", ttft_s=30.0)),
         routing="jsq", dispatch="most_headroom", transfer_dtype_bytes=1,
         class_kv_headroom=0.15,
+        autoscaler=Autoscaler(policy="slo_guard", role="decode",
+                              min_workers=1, max_workers=5, tick_s=1.5,
+                              cold_start_extra_s=3.0),
         notes="round-trip fixture")
 
 
@@ -78,6 +82,59 @@ def test_spec_validation():
     with pytest.raises(ValueError):      # headroom out of range
         Scenario(name="x", model=ModelRef("ds-distill-8b"),
                  fleet=(WorkerGroup(),), class_kv_headroom=1.0)
+
+
+def test_autoscaler_spec_validation():
+    with pytest.raises(ValueError, match="policy"):
+        Autoscaler(policy="oracle")
+    with pytest.raises(ValueError, match="role"):
+        Autoscaler(role="mystery")
+    with pytest.raises(ValueError, match="min_workers"):
+        Autoscaler(min_workers=0)
+    with pytest.raises(ValueError, match="min_workers"):
+        Autoscaler(min_workers=4, max_workers=2)
+    with pytest.raises(ValueError, match="tick_s"):
+        Autoscaler(tick_s=0.0)
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        Autoscaler(ewma_alpha=1.5)
+    with pytest.raises(ValueError, match="no such group"):
+        Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                 fleet=(WorkerGroup(role="colocated"),),
+                 autoscaler=Autoscaler(role="decode"))
+    with pytest.raises(ValueError, match="outside autoscaler bounds"):
+        Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                 fleet=(WorkerGroup(count=8),),
+                 autoscaler=Autoscaler(min_workers=1, max_workers=4))
+    # dict coercion works like the other nested specs
+    sc = Scenario(name="x", model=ModelRef("ds-distill-8b"),
+                  fleet=(WorkerGroup(count=2),),
+                  autoscaler={"policy": "target_utilization",
+                              "max_workers": 4})
+    assert isinstance(sc.autoscaler, Autoscaler)
+
+
+def test_piecewise_traffic_validation():
+    with pytest.raises(ValueError, match="phase"):
+        Traffic(process="piecewise")
+    with pytest.raises(ValueError, match="duration"):
+        Traffic(process="piecewise", phases=((0.0, 5.0),))
+    with pytest.raises(ValueError, match="rate > 0"):
+        Traffic(process="piecewise", phases=((10.0, 0.0),))
+    t = Traffic(process="piecewise", phases=[[10, 2], [5, 8]])
+    assert t.phases == ((10.0, 2.0), (5.0, 8.0))   # normalised to tuples
+
+
+def test_autoscaled_cluster_gets_controller_with_group_matched_factory():
+    sc = get_scenario("ds8b-autoscale-diurnal")
+    rt = sc.to_cluster()
+    assert rt.autoscaler is not None
+    assert rt.autoscaler.role == "colocated"
+    w = rt.autoscaler.worker_factory()
+    # minted replicas match the scaled group exactly and continue its naming
+    assert w.name == f"co{sc.fleet[0].count}"
+    assert w.engine.alloc.n_pages == rt.workers[0].engine.alloc.n_pages
+    assert w.engine.sched.cfg.max_num_seqs == \
+        rt.workers[0].engine.sched.cfg.max_num_seqs
 
 
 # ---------------------------------------------------------------------- trace
