@@ -38,7 +38,10 @@ def timeline_digest(points, k: int = 8) -> str:
                     for i in idx)
 
 
-def run(n_requests: int = N_REQUESTS, rates=RATES):
+def run(n_requests: int = N_REQUESTS, rates=RATES, sanitize: bool = False):
+    """``sanitize=True`` runs every fleet with the sim sanitizer enabled
+    (repro.lint.sanitizer): each step asserts the event-loop invariants the
+    benchmark's claims depend on, with bit-identical metrics."""
     base = get_scenario(MODES["colocated"])
     slo = base.slo("interactive")
     scale = (f"n={n_requests};4xH200;sim;"
@@ -50,7 +53,7 @@ def run(n_requests: int = N_REQUESTS, rates=RATES):
             sc = get_scenario(name)
             sc = dataclasses.replace(sc, traffic=dataclasses.replace(
                 sc.traffic, rate=float(rate), n_requests=n_requests))
-            rt = sc.to_cluster()
+            rt = sc.to_cluster(sanitize=sanitize)
             rt.submit_trace(sc.trace())
             m = rt.run(max_steps=2_000_000)
             s = m.summary(slo)

@@ -69,7 +69,8 @@ class RoundRobin(RoutingPolicy):
     def __init__(self):
         self._rr = -1
 
-    def pick(self, workers, prompt_len, max_new, urgency=0.0):
+    def pick(self, workers: List[Worker], prompt_len: int,
+             max_new: int, urgency: float = 0.0) -> int:
         ok = set(eligible_indices(workers, prompt_len, max_new))
         for step in range(1, len(workers) + 1):
             i = (self._rr + step) % len(workers)
@@ -80,7 +81,8 @@ class RoundRobin(RoutingPolicy):
 
 
 class JoinShortestQueue(RoutingPolicy):
-    def pick(self, workers, prompt_len, max_new, urgency=0.0):
+    def pick(self, workers: List[Worker], prompt_len: int,
+             max_new: int, urgency: float = 0.0) -> int:
         return min(eligible_indices(workers, prompt_len, max_new),
                    key=lambda i: workers[i].queue_depth)
 
@@ -135,7 +137,8 @@ class MemoryAware(RoutingPolicy):
             return 0.0
         return self._lat_ewma[name] / mean - 1.0
 
-    def pick(self, workers, prompt_len, max_new, urgency=0.0):
+    def pick(self, workers: List[Worker], prompt_len: int,
+             max_new: int, urgency: float = 0.0) -> int:
         pool_names = [w.name for w in workers]
 
         def score(i):
@@ -181,7 +184,8 @@ class LeastKVHeadroom(DispatchPolicy):
     short decodes never stress the capacity wall best-fit protects. Falls
     back to the most-headroom worker when none fits."""
 
-    def pick(self, workers, req, urgency=0.0):
+    def pick(self, workers: List[Worker], req: Request,
+             urgency: float = 0.0) -> Optional[int]:
         if not workers:
             return None
         need = [None] * len(workers)
@@ -204,7 +208,8 @@ class LeastKVHeadroom(DispatchPolicy):
 class MostKVHeadroom(DispatchPolicy):
     """Worst-fit (load-levelling) decode dispatch: always the emptiest."""
 
-    def pick(self, workers, req, urgency=0.0):
+    def pick(self, workers: List[Worker], req: Request,
+             urgency: float = 0.0) -> Optional[int]:
         if not workers:
             return None
         return max(range(len(workers)),

@@ -63,7 +63,7 @@ class ClusterConfig:
 class ClusterRuntime:
     def __init__(self, workers: Sequence[Worker],
                  cfg: Optional[ClusterConfig] = None,
-                 autoscaler=None):
+                 autoscaler=None, sanitize: bool = False):
         if not workers:
             raise ValueError("cluster needs at least one worker")
         if not all(w.engine.virtual_clock for w in workers):
@@ -115,6 +115,12 @@ class ClusterRuntime:
         self._classes = ClassPolicy(priority=dict(self.cfg.class_priorities))
         self.submitted: List[Request] = []
         self.metrics = ClusterMetrics(self.workers, submitted=self.submitted)
+        # dynamic invariant checks (repro.lint.sanitizer) every loop
+        # iteration; read-only, so metrics stay bit-identical
+        self._sanitizer = None
+        if sanitize:
+            from repro.lint.sanitizer import ClusterSanitizer
+            self._sanitizer = ClusterSanitizer()
 
     # ------------------------------------------------------------------- api
     @property
@@ -318,6 +324,8 @@ class ClusterRuntime:
                 self._harvest_prefill_complete(w)
             if w.draining:
                 self._finish_retirements()
+            if self._sanitizer is not None:
+                self._sanitizer.check(self)
         # stamp the fleet makespan so summaries use the true serving window
         # and can count still-in-flight requests as SLO misses
         self.metrics.t_end = self.makespan

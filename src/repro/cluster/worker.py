@@ -146,7 +146,8 @@ def make_sim_worker(cfg: ModelConfig, plan: pm.ParallelismPlan,
                     autotune: bool = False, dtype_bytes: int = 2,
                     cache_dtype_bytes: int = 2, rid_source=None,
                     class_priorities: Optional[Dict[str, int]] = None,
-                    class_kv_headroom: float = 0.0) -> Worker:
+                    class_kv_headroom: float = 0.0,
+                    sanitize: bool = False) -> Worker:
     """Virtual-clock worker with paper-calibrated capacity and role-default
     admission (see `default_n_pages` / `default_admission`).
     ``class_priorities``/``class_kv_headroom`` enable multi-tenant SLO-class
@@ -162,7 +163,8 @@ def make_sim_worker(cfg: ModelConfig, plan: pm.ParallelismPlan,
                         chunk_size=chunk_size, admission_mode=admission,
                         autotune=autotune, prefill_only=role == "prefill",
                         class_priorities=dict(class_priorities or {}),
-                        class_kv_headroom=class_kv_headroom)
+                        class_kv_headroom=class_kv_headroom,
+                        sanitize=sanitize)
     eng = InferenceEngine(cfg, ecfg, SimRunner(cfg, plan, hw, dtype_bytes),
                           rid_source=rid_source)
     return Worker(engine=eng, role=role, name=name)

@@ -39,6 +39,9 @@ class EngineConfig:
     # critical), and the pool fraction only top-urgency requests may use
     class_priorities: Dict[str, int] = dataclasses.field(default_factory=dict)
     class_kv_headroom: float = 0.0
+    # dynamic invariant checks (repro.lint.sanitizer) after every step;
+    # read-only, so metrics stay bit-identical to the default path
+    sanitize: bool = False
 
 
 class InferenceEngine:
@@ -67,6 +70,10 @@ class InferenceEngine:
         self._steps = 0
         self.autotuner = ConcurrencyAutotuner(
             AutotunerConfig(enabled=ecfg.autotune), ecfg.max_num_seqs)
+        self._sanitizer = None
+        if ecfg.sanitize:
+            from repro.lint.sanitizer import EngineSanitizer
+            self._sanitizer = EngineSanitizer(self)
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt, max_new_tokens: int,
@@ -152,6 +159,9 @@ class InferenceEngine:
             # open-loop idle gap: jump to the next arrival
             self.advance_to(nxt)
             self._release_arrivals()
+        # lint: disable=REP002 (real-execution timing, not simulation)
+        # (virtual-clock runs never read t0: the `if self.virtual_clock`
+        # branch below uses the runner's modeled iteration_time instead)
         t0 = time.monotonic()
         plan = self.sched.plan_step()
         for r in plan.admitted:
@@ -170,6 +180,11 @@ class InferenceEngine:
             req.prompt_pos += chunk
             self._prefill_total += chunk
             if completing:
+                # recompute-resume done: fold the regenerated prefix back out
+                # of prompt_pos, else context_len double-counts it forever
+                # (each resumed request would hold ~resume_extra phantom KV
+                # tokens, inflating pool pressure for its whole decode)
+                req.prompt_pos -= req.resume_extra
                 req.resume_extra = 0
                 req.output.append(tok)
                 req.generated += 1
@@ -196,6 +211,8 @@ class InferenceEngine:
             hbm_busy = self.runner.hbm_busy_fraction(parts, dt) \
                 if dt else 0.0
         else:
+            # lint: disable=REP002 (real-execution path: wall time IS now)
+            # (the virtual-clock branch above never reaches this line)
             self.now += time.monotonic() - t0
             hbm_busy = 0.0
 
@@ -238,6 +255,8 @@ class InferenceEngine:
                 preemptions_total=self.sched.n_preemptions,
                 waiting=len(self.sched.waiting),
                 running=len(self.sched.running))
+        if self._sanitizer is not None:
+            self._sanitizer.check()
         return True
 
     def run(self, max_steps: int = 10 ** 7):

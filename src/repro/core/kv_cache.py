@@ -57,13 +57,15 @@ class PagedAllocator:
     # ---- mutation ---------------------------------------------------------
     def grow(self, rid: int, new_total_tokens: int) -> bool:
         """Ensure rid has pages for new_total_tokens; False if pool exhausted
-        (caller must preempt). All-or-nothing."""
-        have = self._tables.setdefault(rid, [])
+        (caller must preempt). All-or-nothing: a failed grow leaves no
+        table entry behind for a rid that had none."""
+        have = self._tables.get(rid, [])
         need = self.pages_for(new_total_tokens) - len(have)
         if need > len(self._free):
             return False
         for _ in range(max(need, 0)):
             have.append(self._free.pop())
+        self._tables[rid] = have
         self._used_tokens[rid] = new_total_tokens
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return True

@@ -43,6 +43,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     aparams = T.abstract_params(cfg, ctx, mode=mode, dtype=params_dtype)
     psh = T.param_shardings(cfg, ctx, mode=mode)
     spec = input_specs(cfg, shape, ctx)
+    # lint: disable=REP002 (measuring real lower/compile wall time, not sim)
     t0 = time.time()
 
     if shape.kind == "train":
@@ -72,10 +73,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             donate_argnums=(1,))
         lowered = jitted.lower(aparams, spec["state"],
                                spec["batch"]["tokens"])
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.time() - t0    # lint: disable=REP002 (real compile timing)
+    t0 = time.time()              # lint: disable=REP002 (real compile timing)
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.time() - t0  # lint: disable=REP002 (real compile timing)
 
     n_dev = mesh.size
     res = analyze_compiled(compiled, n_dev)

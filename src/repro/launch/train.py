@@ -58,6 +58,7 @@ def main():
 
     step_fn = jax.jit(make_train_step(cfg, ctx, ocfg))
     pending = None
+    # lint: disable=REP002 (real training-loop step timing, not simulation)
     t0 = time.time()
     for step in range(start_step, args.steps):
         key, bk = jax.random.split(key)
@@ -67,6 +68,7 @@ def main():
             loss = float(metrics["loss"])
             print(f"[train] step {step+1:5d} loss {loss:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
+                  # lint: disable=REP002 (real training throughput readout)
                   f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)",
                   flush=True)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:

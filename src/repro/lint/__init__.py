@@ -1,0 +1,24 @@
+"""repro.lint — determinism & feasibility checks for the simulator.
+
+Three layers, one goal (a virtual-clock run is a pure function of
+(spec, seed) and its accounting balances):
+
+- static rules over the source (``repro.lint.rules`` / ``runner``,
+  ``python -m repro.lint src/``),
+- static feasibility over a spec (``Scenario.check()``),
+- dynamic invariants over a running sim (``repro.lint.sanitizer``, enabled
+  with ``sanitize=True`` on the engine/cluster).
+"""
+from repro.lint.rules import ALL_RULES, Finding, Rule, default_rules
+from repro.lint.runner import (format_json, format_text, iter_py_files,
+                               lint_file, lint_paths, lint_source,
+                               parse_suppressions)
+from repro.lint.sanitizer import (ClusterSanitizer, EngineSanitizer,
+                                  SanitizerError)
+
+__all__ = [
+    "ALL_RULES", "Finding", "Rule", "default_rules",
+    "lint_source", "lint_file", "lint_paths", "iter_py_files",
+    "parse_suppressions", "format_text", "format_json",
+    "SanitizerError", "EngineSanitizer", "ClusterSanitizer",
+]

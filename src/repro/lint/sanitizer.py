@@ -1,0 +1,233 @@
+"""Sim sanitizer — dynamic event-loop invariants, checked every step.
+
+The static rules (repro.lint.rules) catch the *patterns* of our historical
+bugs; this module catches their *symptoms* at runtime: a virtual clock that
+steps backwards, KV pages leaked or double-owned across eject/inject, a
+queue entry missing from the submitted log, a worker-second timeline that
+contradicts the mint/decommission events.
+
+Every check is strictly read-only over engine/cluster state, so a
+``sanitize=True`` run produces metrics bit-identical to the default path
+(asserted in tests/test_lint.py) — the sanitizer observes, never steers.
+
+Enable with ``EngineConfig(sanitize=True)`` or
+``ClusterRuntime(..., sanitize=True)`` (or ``Scenario.to_engine/to_cluster
+(sanitize=True)``); violations raise ``SanitizerError`` at the step that
+broke the invariant, not thousands of events later.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.request import State
+
+
+class SanitizerError(AssertionError):
+    """An event-loop invariant broke. The message names the invariant and
+    the state that contradicts it."""
+
+
+def _fail(where: str, msg: str):
+    raise SanitizerError(f"[{where}] {msg}")
+
+
+class EngineSanitizer:
+    """Per-engine invariants, checked after each ``step()``:
+
+    - the virtual clock never moves backwards;
+    - KV page conservation: free + held pages == pool size, every page
+      owned exactly once;
+    - only running requests hold page tables, and each table covers its
+      request's used tokens;
+    - running/waiting are duplicate-free and disjoint, with sane states;
+    - the submitted log covers every queued/pending request (eject/inject
+      keep the log consistent), finished requests stayed logged, and no
+      rid was logged twice.
+    """
+
+    def __init__(self, engine, name: str = "engine"):
+        self.engine = engine
+        self.name = name
+        self._last_now: Optional[float] = None
+
+    def check(self):
+        self._check_clock()
+        self._check_kv_conservation()
+        self._check_queues()
+        self._check_submitted_log()
+
+    # ------------------------------------------------------------ invariants
+    def _check_clock(self):
+        now = self.engine.now
+        if self._last_now is not None and now < self._last_now - 1e-12:
+            _fail(self.name, f"virtual clock moved backwards: "
+                             f"{self._last_now} -> {now}")
+        self._last_now = now
+
+    def _check_kv_conservation(self):
+        alloc = self.engine.alloc
+        held = sum(len(t) for t in alloc._tables.values())
+        free = len(alloc._free)
+        if free + held != alloc.n_pages:
+            _fail(self.name, f"KV page leak: free({free}) + held({held}) "
+                             f"!= pool({alloc.n_pages})")
+        owners: Dict[int, str] = {}
+        for p in alloc._free:
+            if p in owners:
+                _fail(self.name, f"page {p} appears twice in the free list")
+            owners[p] = "free"
+        for rid in sorted(alloc._tables):
+            for p in alloc._tables[rid]:
+                if p in owners:
+                    _fail(self.name, f"page {p} double-owned: "
+                                     f"{owners[p]} and rid {rid}")
+                owners[p] = f"rid {rid}"
+        for rid in sorted(alloc._tables):
+            used = alloc._used_tokens.get(rid, 0)
+            have = len(alloc._tables[rid])
+            if alloc.pages_for(used) > have:
+                _fail(self.name, f"rid {rid} uses {used} tokens but holds "
+                                 f"only {have} pages "
+                                 f"(needs {alloc.pages_for(used)})")
+
+    def _check_queues(self):
+        sched = self.engine.sched
+        running = list(sched.running)
+        waiting = list(sched.waiting)
+        run_rids = [r.rid for r in running]
+        wait_rids = [r.rid for r in waiting]
+        if len(set(run_rids)) != len(run_rids):
+            _fail(self.name, f"duplicate rids in running: {run_rids}")
+        if len(set(wait_rids)) != len(wait_rids):
+            _fail(self.name, f"duplicate rids in waiting: {wait_rids}")
+        both = set(run_rids) & set(wait_rids)
+        if both:
+            _fail(self.name, f"rids both running and waiting: {sorted(both)}")
+        for r in running:
+            if r.state is not State.RUNNING:
+                _fail(self.name, f"rid {r.rid} in running set with state "
+                                 f"{r.state}")
+        for r in waiting:
+            if r.state not in (State.WAITING, State.PREEMPTED):
+                _fail(self.name, f"rid {r.rid} in waiting queue with state "
+                                 f"{r.state}")
+        # only running requests may hold pages (waiting/preempted freed
+        # theirs; finished/ejected freed on the way out)
+        orphans = set(self.engine.alloc._tables) - set(run_rids)
+        if orphans:
+            _fail(self.name, f"page tables held by non-running rids: "
+                             f"{sorted(orphans)}")
+        for r in running:
+            used = self.engine.alloc.tokens_of(r.rid)
+            cap = r.isl + r.generated + 1
+            if used > cap:
+                _fail(self.name, f"rid {r.rid} KV tokens {used} exceed "
+                                 f"context+1 ({cap})")
+
+    def _check_submitted_log(self):
+        m = self.engine.metrics
+        sub_rids = [r.rid for r in m.submitted]
+        sub_set = set(sub_rids)
+        if len(sub_set) != len(sub_rids):
+            dupes = sorted({r for r in sub_rids if sub_rids.count(r) > 1})
+            _fail(self.name, f"rids submitted twice: {dupes}")
+        queued = [*self.engine.sched.running, *self.engine.sched.waiting,
+                  *(p[2] for p in self.engine._pending)]
+        missing = [r.rid for r in queued if r.rid not in sub_set]
+        if missing:
+            _fail(self.name, f"queued rids missing from the submitted log "
+                             f"(eject/inject accounting): {sorted(missing)}")
+        fin_missing = [r.rid for r in m.finished if r.rid not in sub_set]
+        if fin_missing:
+            _fail(self.name, f"finished rids missing from the submitted "
+                             f"log: {sorted(fin_missing)}")
+
+
+class ClusterSanitizer:
+    """Fleet-level invariants, checked every run-loop iteration:
+
+    - every worker's engine invariants (sanitizers are created lazily, so
+      autoscale-minted workers are covered from their first step);
+    - worker names unique; pools contain only active members of their role
+      (warming and draining replicas excluded);
+    - lifecycle timeline sane: ``t_active >= t_join``, a decommission stamp
+      never precedes the mint or the retirement request (worker-second
+      accounting depends on this ordering);
+    - in-flight migrations hold no KV pages on any engine (the pages were
+      freed at eject, the target allocates at inject) and have
+      ``ready >= eject``;
+    - the fleet submitted log is duplicate-free.
+    """
+
+    def __init__(self):
+        self._engines: Dict[str, EngineSanitizer] = {}
+
+    def check(self, rt):
+        for w in rt.workers:
+            es = self._engines.get(w.name)
+            if es is None:
+                es = self._engines[w.name] = EngineSanitizer(
+                    w.engine, name=f"worker {w.name}")
+            es.check()
+        self._check_fleet(rt)
+        self._check_lifecycle(rt)
+        self._check_migrations(rt)
+        self._check_submitted(rt)
+
+    # ------------------------------------------------------------ invariants
+    def _check_fleet(self, rt):
+        names = [w.name for w in rt.workers]
+        if len(set(names)) != len(names):
+            _fail("fleet", f"duplicate worker names: {names}")
+        member: List = [*rt.prefill_pool, *rt.decode_pool, *rt.colocated_pool]
+        for w in member:
+            if w not in rt.workers:
+                _fail("fleet", f"pool member {w.name!r} not in the fleet")
+            if w in rt._warming:
+                _fail("fleet", f"warming worker {w.name!r} is already in a "
+                               f"route/dispatch pool")
+            if w.draining:
+                _fail("fleet", f"draining worker {w.name!r} still in a "
+                               f"route/dispatch pool")
+        for pool, role in ((rt.prefill_pool, "prefill"),
+                           (rt.decode_pool, "decode"),
+                           (rt.colocated_pool, "colocated")):
+            for w in pool:
+                if w.role != role:
+                    _fail("fleet", f"worker {w.name!r} (role {w.role!r}) "
+                                   f"sits in the {role} pool")
+
+    def _check_lifecycle(self, rt):
+        for w in rt.workers:
+            if w.t_active < w.t_join - 1e-12:
+                _fail("fleet", f"worker {w.name!r} active at {w.t_active} "
+                               f"before joining at {w.t_join}")
+            if w.t_retire is not None:
+                if w.t_retire < w.t_join - 1e-12:
+                    _fail("fleet", f"worker {w.name!r} retired at "
+                                   f"{w.t_retire} before joining at "
+                                   f"{w.t_join}")
+                asked = rt._retire_requested.get(w.name)
+                if asked is not None and w.t_retire < asked - 1e-12:
+                    _fail("fleet", f"worker {w.name!r} decommissioned at "
+                                   f"{w.t_retire}, before the retirement "
+                                   f"request at {asked}")
+
+    def _check_migrations(self, rt):
+        for m in rt._migrating:
+            req = m["req"]
+            if m["ready"] < m["eject"] - 1e-12:
+                _fail("fleet", f"migration of rid {req.rid} ready at "
+                               f"{m['ready']} before its eject at "
+                               f"{m['eject']}")
+            holders = [w.name for w in rt.workers
+                       if req.rid in w.engine.alloc._tables]
+            if holders:
+                _fail("fleet", f"migrating rid {req.rid} still holds KV "
+                               f"pages on {holders} (eject must free them)")
+
+    def _check_submitted(self, rt):
+        rids = [r.rid for r in rt.submitted]
+        if len(set(rids)) != len(rids):
+            dupes = sorted({r for r in rids if rids.count(r) > 1})
+            _fail("fleet", f"rids in the fleet submitted log twice: {dupes}")

@@ -14,13 +14,14 @@ from repro.scenario.compile import (Resolved, ResolvedGroup, aggregate_plan,
 from repro.scenario.registry import (SCENARIOS, get_scenario,
                                      register_scenario, variant)
 from repro.scenario.spec import (AUTOSCALE_POLICIES, HARDWARE, PROCESSES,
-                                 ROLES, WORKLOADS, Autoscaler, ModelRef,
-                                 Scenario, SLOClass, Traffic, WorkerGroup,
-                                 register_hardware, register_workload)
+                                 ROLES, WORKLOADS, Autoscaler, Diagnostic,
+                                 ModelRef, Scenario, SLOClass, Traffic,
+                                 WorkerGroup, register_hardware,
+                                 register_workload)
 
 __all__ = [
     "Scenario", "ModelRef", "WorkerGroup", "Traffic", "SLOClass",
-    "Autoscaler", "AUTOSCALE_POLICIES",
+    "Autoscaler", "AUTOSCALE_POLICIES", "Diagnostic",
     "HARDWARE", "WORKLOADS", "ROLES", "PROCESSES",
     "register_hardware", "register_workload",
     "Resolved", "ResolvedGroup", "resolve", "aggregate_plan",

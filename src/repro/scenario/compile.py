@@ -170,7 +170,8 @@ def estimate_fleet(sc: Scenario) -> planner.PlanEstimate:
 
 
 # --------------------------------------------------------- fidelity 2: engine
-def _build_worker(r: Resolved, rg: ResolvedGroup, name: str = "") -> Worker:
+def _build_worker(r: Resolved, rg: ResolvedGroup, name: str = "",
+                  sanitize: bool = False) -> Worker:
     g = rg.group
     sc = r.scenario
     return make_sim_worker(
@@ -181,23 +182,30 @@ def _build_worker(r: Resolved, rg: ResolvedGroup, name: str = "") -> Worker:
         dtype_bytes=sc.model.dtype_bytes,
         cache_dtype_bytes=sc.model.cache_dtype_bytes,
         class_priorities=sc.class_priorities(),
-        class_kv_headroom=sc.class_kv_headroom)
+        class_kv_headroom=sc.class_kv_headroom,
+        sanitize=sanitize)
 
 
-def to_engine(sc: Scenario, group: int = 0) -> InferenceEngine:
+def to_engine(sc: Scenario, group: int = 0,
+              sanitize: bool = False) -> InferenceEngine:
     """One representative virtual-clock replica of ``fleet[group]`` (engine
-    fidelity: real scheduler/allocator dynamics, no fleet effects)."""
+    fidelity: real scheduler/allocator dynamics, no fleet effects).
+    ``sanitize=True`` turns on per-step invariant checks
+    (repro.lint.sanitizer) — read-only, metrics stay bit-identical."""
     r = resolve(sc)
-    return _build_worker(r, r.groups[group]).engine
+    return _build_worker(r, r.groups[group], sanitize=sanitize).engine
 
 
 # -------------------------------------------------------- fidelity 3: cluster
-def to_cluster(sc: Scenario):
+def to_cluster(sc: Scenario, sanitize: bool = False):
     """The full fleet: every worker of every group, wired to the scenario's
     routing/dispatch policies and KV-transfer wire format. A spec with an
     ``autoscaler`` gets an ``AutoscaleController`` whose worker factory mints
     replicas from the scaled role's (resolved) group — same capacity, same
-    admission, fresh monotonic names continuing the group's numbering."""
+    admission, fresh monotonic names continuing the group's numbering.
+    ``sanitize=True`` checks fleet + engine invariants every loop iteration
+    (repro.lint.sanitizer, covers autoscale-minted workers too) — read-only,
+    metrics stay bit-identical."""
     from repro.cluster.autoscale import make_autoscaler
     from repro.cluster.runtime import ClusterConfig, ClusterRuntime
     r = resolve(sc)
@@ -220,4 +228,5 @@ def to_cluster(sc: Scenario):
             return _build_worker(r, rg, name=f"{prefix}{next(seq)}")
 
         autoscaler = make_autoscaler(a, factory, slo=sc.slo())
-    return ClusterRuntime(workers, ccfg, autoscaler=autoscaler)
+    return ClusterRuntime(workers, ccfg, autoscaler=autoscaler,
+                          sanitize=sanitize)

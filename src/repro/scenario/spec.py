@@ -236,6 +236,20 @@ class Autoscaler:
                              f"{self.cold_start_extra_s}")
 
 
+# --------------------------------------------------------------- diagnostics
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One feasibility finding from ``Scenario.check()``: ``code`` is a
+    stable machine-readable kind, ``field`` the spec path it points at."""
+    code: str
+    severity: str                 # "error" | "warning"
+    field: str
+    message: str
+
+    def format(self) -> str:
+        return f"[{self.code}] {self.severity} at {self.field}: {self.message}"
+
+
 # ------------------------------------------------------------------ scenario
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -350,6 +364,173 @@ class Scenario:
     def from_json(cls, s: str) -> "Scenario":
         return cls.from_dict(json.loads(s))
 
+    # ------------------------------------------------------------ feasibility
+    def check(self, include_warnings: bool = False) -> list:
+        """Static feasibility diagnostics — no engine or cluster is built,
+        no trace is drawn. Catches the spec mistakes the constructor can't
+        see (they need the *resolved* model/hardware/workload): a KV pool
+        too small for the workload's structural max request, TP degrees
+        that don't divide the head counts, PP deeper than the layer stack,
+        a ``class_mix`` that doesn't sum to 1, autoscaler bounds that
+        contradict the fleet, degenerate piecewise phases.
+
+        Returns ``Diagnostic`` rows, errors only by default
+        (``include_warnings=True`` adds advisory findings such as a PP
+        degree that divides the layers unevenly). An empty list means the
+        spec compiles and every structurally possible request fits."""
+        diags: list = []
+
+        def add(code, severity, field, message):
+            diags.append(Diagnostic(code=code, severity=severity,
+                                    field=field, message=message))
+
+        cfg = None
+        try:
+            cfg = self.model.resolve()
+        except KeyError as e:
+            add("unknown_model", "error", "model.name", str(e))
+        workload = None
+        try:
+            workload = self.traffic.workload_spec()
+        except KeyError as e:
+            add("unknown_workload", "error", "traffic.workload", str(e))
+
+        self._check_fleet_capacity(cfg, workload, add)
+        self._check_parallelism(cfg, add)
+        self._check_traffic(add)
+        self._check_autoscaler(add)
+        if include_warnings:
+            return diags
+        return [d for d in diags if d.severity == "error"]
+
+    def _check_fleet_capacity(self, cfg, workload, add):
+        """Per-group KV pool vs the workload's structural max request."""
+        if workload is None:
+            return
+        osl_eff = min(workload.osl_max,
+                      self.traffic.osl_cap or workload.osl_max)
+        for i, g in enumerate(self.fleet):
+            field = f"fleet[{i}]"
+            try:
+                hw = _lookup(HARDWARE, g.hardware, "hardware")
+            except KeyError as e:
+                add("unknown_hardware", "error", f"{field}.hardware", str(e))
+                continue
+            n_pages = g.n_pages
+            if n_pages is None:
+                if cfg is None:
+                    continue          # capacity default needs the model
+                from repro.cluster.worker import default_n_pages
+                n_pages = default_n_pages(cfg, g.plan, hw,
+                                          self.model.dtype_bytes, g.page_size,
+                                          self.model.cache_dtype_bytes)
+            cap = n_pages * g.page_size
+            # a prefill worker holds prompt + first token only; everyone
+            # else must hold the full context at last decode
+            need = workload.isl_max + 2 if g.role == "prefill" \
+                else workload.isl_max + osl_eff + 1
+            if cap < need:
+                add("kv_pool_too_small", "error", f"{field}.n_pages",
+                    f"{g.role} KV pool holds {cap} tokens but the "
+                    f"{self.traffic.workload!r} workload's largest request "
+                    f"needs {need} (isl_max {workload.isl_max}"
+                    + ("" if g.role == "prefill"
+                       else f" + capped osl {osl_eff}") + " + 1)")
+            if g.max_batched_tokens < g.chunk_size:
+                add("chunk_over_budget", "warning", f"{field}.chunk_size",
+                    f"chunk_size {g.chunk_size} exceeds max_batched_tokens "
+                    f"{g.max_batched_tokens}; prefill chunks will be "
+                    f"truncated to the budget")
+
+    def _check_parallelism(self, cfg, add):
+        if cfg is None:
+            return
+        for i, g in enumerate(self.fleet):
+            field = f"fleet[{i}].plan"
+            p = g.plan
+            if p.tp > 1:
+                if cfg.n_heads % p.tp:
+                    add("tp_heads", "error", field,
+                        f"tp={p.tp} does not divide n_heads={cfg.n_heads}")
+                if cfg.attention != "mla" and cfg.n_kv_heads % p.tp:
+                    add("tp_kv_heads", "error", field,
+                        f"tp={p.tp} does not divide "
+                        f"n_kv_heads={cfg.n_kv_heads} (KV-head shards "
+                        f"would be uneven)")
+            if p.pp > 1:
+                if p.pp > cfg.n_layers:
+                    add("pp_layers", "error", field,
+                        f"pp={p.pp} exceeds n_layers={cfg.n_layers} "
+                        f"(empty pipeline stages)")
+                elif cfg.n_layers % p.pp:
+                    add("pp_imbalance", "warning", field,
+                        f"pp={p.pp} does not divide "
+                        f"n_layers={cfg.n_layers}; the deepest stage "
+                        f"bounds every microbatch")
+            if p.ep > 1 and cfg.moe is not None and cfg.moe.n_experts \
+                    and cfg.moe.n_experts % p.ep:
+                add("ep_imbalance", "warning", field,
+                    f"ep={p.ep} does not divide "
+                    f"n_experts={cfg.moe.n_experts}; expert shards would "
+                    f"be uneven")
+
+    def _check_traffic(self, add):
+        t = self.traffic
+        if t.class_mix:
+            total = sum(w for _, w in t.class_mix)
+            if abs(total - 1.0) > 1e-6:
+                add("class_mix_sum", "error", "traffic.class_mix",
+                    f"class_mix weights sum to {total}, not 1")
+        if t.process == "piecewise":
+            # re-validated without raising: a spec corrupted after
+            # construction (or built through a future non-validating path)
+            # still gets a diagnostic instead of a mid-run surprise
+            if not t.phases:
+                add("phases_empty", "error", "traffic.phases",
+                    "piecewise traffic has no (duration_s, rate) phases")
+            elif any(d <= 0 for d, _ in t.phases):
+                add("phases_nonmonotone", "error", "traffic.phases",
+                    f"piecewise phase durations must be > 0 (the phase "
+                    f"clock must advance): {t.phases}")
+            elif all(r == 0 for _, r in t.phases):
+                add("phases_silent", "error", "traffic.phases",
+                    "every piecewise phase has rate 0: no request ever "
+                    "arrives")
+        if t.process == "trace" and t.arrivals:
+            if any(b < a for a, b in zip(t.arrivals, t.arrivals[1:])):
+                add("trace_unsorted", "warning", "traffic.arrivals",
+                    "trace arrival times are not sorted; the runtime "
+                    "replays them in time order, which reorders rids "
+                    "relative to the trace")
+
+    def _check_autoscaler(self, add):
+        a = self.autoscaler
+        if a is None:
+            return
+        grp = [(i, g) for i, g in enumerate(self.fleet) if g.role == a.role]
+        if not grp:
+            add("autoscaler_role", "error", "autoscaler.role",
+                f"autoscaler targets role {a.role!r} but the fleet has no "
+                f"such group")
+            return
+        if len(grp) > 1:
+            add("autoscaler_role", "error", "autoscaler.role",
+                f"{len(grp)} groups share the scaled role {a.role!r}; "
+                f"minted replicas would be ambiguous")
+        i, g = grp[0]
+        if a.min_workers < 1 or a.max_workers < a.min_workers:
+            add("autoscaler_bounds", "error", "autoscaler.min_workers",
+                f"need 1 <= min_workers <= max_workers, got "
+                f"[{a.min_workers}, {a.max_workers}]")
+        elif not a.min_workers <= g.count <= a.max_workers:
+            add("autoscaler_bounds", "error", f"fleet[{i}].count",
+                f"initial {a.role} count {g.count} outside autoscaler "
+                f"bounds [{a.min_workers}, {a.max_workers}]")
+        if a.min_workers == a.max_workers:
+            add("autoscaler_pinned", "warning", "autoscaler.max_workers",
+                f"min_workers == max_workers == {a.min_workers}: the "
+                f"controller can never act")
+
     # ------------------------------------------------------------ compilers
     # Thin delegates so a spec in hand is one call away from any fidelity
     # (the real work — one shared resolution pass — lives in
@@ -362,13 +543,13 @@ class Scenario:
         from repro.scenario.compile import to_plan
         return to_plan(self, n_devices=n_devices)
 
-    def to_engine(self, group: int = 0):
+    def to_engine(self, group: int = 0, sanitize: bool = False):
         from repro.scenario.compile import to_engine
-        return to_engine(self, group=group)
+        return to_engine(self, group=group, sanitize=sanitize)
 
-    def to_cluster(self):
+    def to_cluster(self, sanitize: bool = False):
         from repro.scenario.compile import to_cluster
-        return to_cluster(self)
+        return to_cluster(self, sanitize=sanitize)
 
     def trace(self):
         from repro.scenario.compile import trace

@@ -114,6 +114,25 @@ def test_kv_aware_admission_prevents_preemption_in_sim():
     assert sa["recomputed_tokens"] == 0
 
 
+def test_resumed_request_context_len_not_inflated():
+    """Regression: completing a recompute-resume used to zero resume_extra
+    without folding the regenerated prefix out of prompt_pos, so context_len
+    double-counted it — every preempted-then-resumed request held phantom KV
+    pages for the rest of its decode (found by the sim sanitizer's
+    used <= isl + generated + 1 invariant)."""
+    from repro.configs.paper_models import DS_DISTILL_8B
+    eng = _sim_engine(DS_DISTILL_8B, 256, 3000, admission="naive")
+    from repro.lint.sanitizer import EngineSanitizer
+    eng._sanitizer = EngineSanitizer(eng)
+    for _ in range(120):
+        eng.submit(100, 600, arrival=0.0)
+    s = eng.run(max_steps=50000).summary()   # sanitizer checks every step
+    assert s["preemptions"] > 0, "pool was sized to force preemption"
+    for r in eng.metrics.finished:
+        assert r.resume_extra == 0
+        assert r.context_len == r.isl + r.generated, vars(r)
+
+
 def test_autotuner_backs_off():
     from repro.configs.paper_models import DS_DISTILL_8B
     cfg = DS_DISTILL_8B

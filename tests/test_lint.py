@@ -1,0 +1,388 @@
+"""repro.lint: per-rule fire/clean fixture pairs, suppression parsing, the
+CLI, the repo's own src/ staying lint-clean, Scenario.check() feasibility
+diagnostics (registry sweep included), and the sim sanitizer — invariant
+detection plus metrics bit-identity of sanitize=True runs."""
+import dataclasses
+import json
+
+import pytest
+
+import repro
+from repro.lint import (default_rules, lint_paths, lint_source,
+                        SanitizerError)
+from repro.lint.__main__ import main as lint_main
+from repro.lint.sanitizer import ClusterSanitizer, EngineSanitizer
+from repro.scenario import SCENARIOS, Diagnostic, get_scenario, variant
+
+# findings are path-scoped for some rules: fixtures pretend to live in core
+SIM_PATH = "repro/core/fixture.py"
+OTHER_PATH = "repro/launch/fixture.py"
+
+
+def _ids(source, path=SIM_PATH):
+    return [f.rule_id for f in lint_source(source, path)]
+
+
+# --------------------------------------------------------------- rule pairs
+def test_rep001_fires_on_global_and_unseeded_rng():
+    fires = (
+        "import numpy as np\nx = np.random.normal(0, 1)\n",
+        "import numpy as np\nnp.random.seed(0)\n",
+        "import numpy as np\nrng = np.random.default_rng()\n",
+        "import random\nx = random.random()\n",
+    )
+    for src in fires:
+        assert "REP001" in _ids(src), src
+
+
+def test_rep001_clean_on_seeded_generator_and_outside_sim_paths():
+    clean = "import numpy as np\nrng = np.random.default_rng(42)\n" \
+            "x = rng.normal(0, 1)\n"
+    assert "REP001" not in _ids(clean)
+    # scope gate: launch scripts may use whatever RNG they like
+    fires = "import numpy as np\nx = np.random.normal(0, 1)\n"
+    assert "REP001" not in _ids(fires, path=OTHER_PATH)
+
+
+def test_rep002_fires_on_wall_clock_everywhere():
+    for src in ("import time\nt = time.time()\n",
+                "import time\nt = time.monotonic()\n",
+                "from datetime import datetime\nd = datetime.now()\n"):
+        assert "REP002" in _ids(src, path=OTHER_PATH), src
+
+
+def test_rep002_clean_on_virtual_clock():
+    assert "REP002" not in _ids("t = engine.now\n")
+
+
+def test_rep003_fires_on_set_iteration():
+    for src in ("for x in {1, 2, 3}:\n    pass\n",
+                "for x in set(items):\n    pass\n",
+                "ys = [f(x) for x in {1, 2}]\n"):
+        assert "REP003" in _ids(src), src
+
+
+def test_rep003_clean_on_sorted_and_lists():
+    for src in ("for x in sorted({1, 2, 3}):\n    pass\n",
+                "for x in [1, 2, 3]:\n    pass\n"):
+        assert "REP003" not in _ids(src), src
+
+
+def test_rep004_fires_on_id_as_key():
+    assert "REP004" in _ids("key = id(engine) & 0xffff\n")
+
+
+def test_rep004_clean_on_counter_identity():
+    src = "import itertools\nseq = itertools.count()\nkey = next(seq)\n"
+    assert "REP004" not in _ids(src)
+
+
+def test_rep005_fires_on_mutable_default():
+    for src in ("def f(xs=[]):\n    pass\n",
+                "def f(m={}):\n    pass\n",
+                "def f(*, xs=list()):\n    pass\n"):
+        assert "REP005" in _ids(src), src
+
+
+def test_rep005_clean_on_none_default():
+    assert "REP005" not in _ids("def f(xs=None):\n    xs = xs or []\n")
+
+
+def test_rep006_fires_on_time_equality():
+    for src in ("if a.t_finished == b.t_finished:\n    pass\n",
+                "if now != deadline:\n    pass\n"):
+        assert "REP006" in _ids(src), src
+
+
+def test_rep006_clean_on_tolerance_and_none():
+    for src in ("if t_retire is None:\n    pass\n",
+                "if abs(now - deadline) < 1e-9:\n    pass\n",
+                "if count == 3:\n    pass\n"):
+        assert "REP006" not in _ids(src), src
+
+
+ROUTING_BASE = (
+    "from typing import List\n"
+    "class RoutingPolicy:\n"
+    "    def pick(self, workers: List[Worker], prompt_len: int,\n"
+    "             max_new: int, urgency: float = 0.0) -> int:\n"
+    "        raise NotImplementedError\n")
+
+
+def test_rep007_fires_on_signature_drift():
+    drifted = ROUTING_BASE + (
+        "class Mine(RoutingPolicy):\n"
+        "    def pick(self, workers, prompt_len, max_new, urgency=0.0):\n"
+        "        return 0\n")
+    assert "REP007" in _ids(drifted, path=OTHER_PATH)
+
+
+def test_rep007_clean_on_exact_conformance():
+    conforming = ROUTING_BASE + (
+        "class Mine(RoutingPolicy):\n"
+        "    def pick(self, workers: List[Worker], prompt_len: int,\n"
+        "             max_new: int, urgency: float = 0.0) -> int:\n"
+        "        return 0\n")
+    assert "REP007" not in _ids(conforming, path=OTHER_PATH)
+
+
+FROZEN = ("import dataclasses\n"
+          "@dataclasses.dataclass(frozen=True)\n"
+          "class Spec:\n"
+          "    x: int = 0\n")
+
+
+def test_rep008_fires_on_mutation_outside_post_init():
+    src = FROZEN + "s = Spec()\nobject.__setattr__(s, 'x', 1)\n"
+    assert "REP008" in _ids(src, path=OTHER_PATH)
+
+
+def test_rep008_clean_inside_post_init():
+    src = ("import dataclasses\n"
+           "@dataclasses.dataclass(frozen=True)\n"
+           "class Spec:\n"
+           "    x: int = 0\n"
+           "    def __post_init__(self):\n"
+           "        object.__setattr__(self, 'x', abs(self.x))\n")
+    assert "REP008" not in _ids(src, path=OTHER_PATH)
+
+
+# ------------------------------------------------------------- suppressions
+def test_suppression_with_reason_silences_finding():
+    src = "import time\nt = time.time()  # lint: disable=REP002 (measuring)\n"
+    assert _ids(src, path=OTHER_PATH) == []
+
+
+def test_own_line_suppression_governs_next_code_line():
+    src = ("import time\n"
+           "# lint: disable=REP002 (measuring real wall time here)\n"
+           "# (a longer explanation may follow the pragma)\n"
+           "t = time.time()\n")
+    assert _ids(src, path=OTHER_PATH) == []
+
+
+def test_suppression_without_reason_is_rep000():
+    src = "import time\nt = time.time()  # lint: disable=REP002\n"
+    ids = _ids(src, path=OTHER_PATH)
+    assert "REP000" in ids and "REP002" in ids
+
+
+def test_suppression_only_silences_named_rule():
+    src = ("import time\n"
+           "t = time.time()  # lint: disable=REP001 (wrong rule named)\n")
+    assert "REP002" in _ids(src, path=OTHER_PATH)
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_exits_nonzero_on_findings(tmp_path, capsys):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n")
+    assert lint_main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "REP002" in out and "1 error(s)" in out
+
+
+def test_cli_exits_zero_on_clean_tree(tmp_path, capsys):
+    good = tmp_path / "repro" / "core" / "good.py"
+    good.parent.mkdir(parents=True)
+    good.write_text("x = 1\n")
+    assert lint_main([str(tmp_path)]) == 0
+
+
+def test_cli_json_output(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(xs=[]):\n    pass\n")
+    assert lint_main(["--json", str(bad)]) == 1
+    rows = json.loads(capsys.readouterr().out)
+    assert rows and rows[0]["rule_id"] == "REP005"
+
+
+def test_repo_src_is_lint_clean():
+    """The acceptance gate, as a regression test: the repo's own source has
+    zero findings (every legitimate pattern carries a justified
+    suppression)."""
+    src_root = next(iter(repro.__path__))
+    findings = lint_paths([src_root])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# ---------------------------------------------------------- Scenario.check()
+def test_registry_sweep_no_diagnostics():
+    for name, sc in SCENARIOS.items():
+        diags = sc.check()
+        assert diags == [], (name, [d.format() for d in diags])
+
+
+def test_r1_pp_imbalance_is_a_warning():
+    """61 layers on pp=4 is legal (one stage is deeper) but worth
+    surfacing: errors-only check passes, include_warnings names it."""
+    sc = get_scenario("r1-8xh200-pp4tp2")
+    assert sc.check() == []
+    codes = [d.code for d in sc.check(include_warnings=True)]
+    assert "pp_imbalance" in codes
+
+
+def test_check_kv_pool_too_small():
+    sc = variant("ds8b-4xh200-colocated",
+                 fleet=(dataclasses.replace(
+                     SCENARIOS["ds8b-4xh200-colocated"].fleet[0],
+                     n_pages=64),))
+    codes = [d.code for d in sc.check()]
+    assert "kv_pool_too_small" in codes
+    d = next(x for x in sc.check() if x.code == "kv_pool_too_small")
+    assert isinstance(d, Diagnostic) and d.severity == "error"
+    assert "fleet[0]" in d.field
+
+
+def test_check_tp_not_dividing_heads():
+    sc = variant("ds8b-8xh200-dp8",
+                 fleet=(dataclasses.replace(
+                     SCENARIOS["ds8b-8xh200-dp8"].fleet[0],
+                     plan=dataclasses.replace(
+                         SCENARIOS["ds8b-8xh200-dp8"].fleet[0].plan, tp=3)),))
+    codes = [d.code for d in sc.check()]
+    assert "tp_heads" in codes or "tp_kv_heads" in codes
+
+
+def test_check_pp_exceeding_layers_is_error():
+    base = SCENARIOS["ds8b-8xh200-dp8"]
+    sc = variant("ds8b-8xh200-dp8",
+                 fleet=(dataclasses.replace(
+                     base.fleet[0],
+                     plan=dataclasses.replace(base.fleet[0].plan, pp=64)),))
+    assert "pp_layers" in [d.code for d in sc.check()]
+
+
+def test_check_class_mix_sum():
+    """The constructor validates names but not weights summing to 1 —
+    that's check()'s job (a 90/20 split silently skews the trace)."""
+    base = SCENARIOS["ds8b-4xh200-mixed"]
+    sc = variant("ds8b-4xh200-mixed",
+                 traffic=dataclasses.replace(
+                     base.traffic,
+                     class_mix=(("interactive", 0.9), ("batch", 0.2))))
+    assert "class_mix_sum" in [d.code for d in sc.check()]
+
+
+def test_check_autoscaler_bounds_on_corrupted_spec():
+    """The constructor raises on bad bounds; check() re-validates without
+    raising so a post-construction corruption still gets a diagnostic."""
+    sc = get_scenario("ds8b-autoscale-diurnal")
+    bad = dataclasses.replace(sc)
+    object.__setattr__(  # lint: disable=REP008 (test corrupts a spec on purpose)
+        bad, "autoscaler",
+        dataclasses.replace(sc.autoscaler, min_workers=4, max_workers=6))
+    assert "autoscaler_bounds" in [d.code for d in bad.check()]
+
+
+def test_check_piecewise_phases_on_corrupted_spec():
+    sc = get_scenario("ds8b-autoscale-diurnal")
+    bad_traffic = dataclasses.replace(sc.traffic)
+    object.__setattr__(  # lint: disable=REP008 (test corrupts a spec on purpose)
+        bad_traffic, "phases", ())
+    bad = dataclasses.replace(sc)
+    object.__setattr__(  # lint: disable=REP008 (test corrupts a spec on purpose)
+        bad, "traffic", bad_traffic)
+    assert "phases_empty" in [d.code for d in bad.check()]
+
+
+# -------------------------------------------------------------- sim sanitizer
+def _small(name, n_requests):
+    sc = get_scenario(name)
+    return variant(name, traffic=dataclasses.replace(
+        sc.traffic, n_requests=n_requests))
+
+
+def test_sanitized_cluster_run_is_bit_identical():
+    """sanitize=True must be observation-only: identical summary dict,
+    including a disaggregated fleet (eject/inject paths exercised)."""
+    for name in ("ds8b-4xh200-colocated", "ds8b-4xh200-disagg"):
+        sc = _small(name, 25)
+        plain = sc.to_cluster().run().summary(slo=sc.slo())
+        checked = sc.to_cluster(sanitize=True).run().summary(slo=sc.slo())
+        assert json.dumps(plain, sort_keys=True) \
+            == json.dumps(checked, sort_keys=True), name
+
+
+def test_sanitized_autoscale_run_is_bit_identical():
+    """Minted/retired workers are covered lazily and checked without
+    perturbing the controller's decisions."""
+    sc = _small("ds8b-autoscale-diurnal", 40)
+    plain = sc.to_cluster().run().summary(slo=sc.slo())
+    checked = sc.to_cluster(sanitize=True).run().summary(slo=sc.slo())
+    assert json.dumps(plain, sort_keys=True) \
+        == json.dumps(checked, sort_keys=True)
+
+
+def test_sanitized_engine_run_matches_default():
+    sc = _small("ds8b-4xh200-colocated", 20)
+    plain = sc.to_engine()
+    checked = sc.to_engine(sanitize=True)
+    for eng in (plain, checked):
+        for isl, osl in [(512, 64)] * 10:
+            eng.submit(isl, osl)
+        eng.run()
+    assert json.dumps(plain.metrics.summary(), sort_keys=True) \
+        == json.dumps(checked.metrics.summary(), sort_keys=True)
+
+
+def test_sanitizer_catches_kv_leak():
+    sc = _small("ds8b-4xh200-colocated", 5)
+    eng = sc.to_engine(sanitize=True)
+    eng.submit(256, 32)
+    assert eng.step()
+    eng.alloc._free.pop()            # simulate a leaked page
+    with pytest.raises(SanitizerError, match="KV page leak"):
+        eng.step()
+
+
+def test_sanitizer_catches_clock_regression():
+    sc = _small("ds8b-4xh200-colocated", 5)
+    eng = sc.to_engine(sanitize=True)
+    eng.submit(256, 32)
+    assert eng.step()
+    eng.now = -1.0
+    with pytest.raises(SanitizerError, match="clock moved backwards"):
+        eng.step()
+
+
+def test_sanitizer_catches_orphaned_page_table():
+    sc = _small("ds8b-4xh200-colocated", 5)
+    eng = sc.to_engine(sanitize=True)
+    eng.submit(256, 32)
+    assert eng.step()
+    eng.alloc._tables[99999] = [eng.alloc._free.pop()]  # phantom request
+    with pytest.raises(SanitizerError, match="non-running"):
+        eng.step()
+
+
+def test_sanitizer_catches_submitted_log_hole():
+    sc = _small("ds8b-4xh200-colocated", 5)
+    eng = sc.to_engine(sanitize=True)
+    req = eng.submit(256, 32)
+    assert eng.step()
+    eng.metrics.submitted.remove(req)   # queued but unlogged
+    with pytest.raises(SanitizerError, match="submitted log"):
+        eng.step()
+
+
+def test_cluster_sanitizer_catches_lifecycle_violation():
+    sc = _small("ds8b-4xh200-colocated", 5)
+    rt = sc.to_cluster(sanitize=True)
+    rt.workers[0].t_join = 10.0      # active before minted
+    rt.workers[0].t_active = 0.0
+    rt.submit(256, 32, arrival=0.0)
+    with pytest.raises(SanitizerError, match="before joining"):
+        rt.run()
+
+
+def test_cluster_sanitizer_direct_check_passes_on_healthy_fleet():
+    sc = _small("ds8b-4xh200-disagg", 10)
+    rt = sc.to_cluster()
+    for isl, osl in [(512, 64)] * 6:
+        rt.submit(isl, osl, arrival=0.0)
+    rt.run()
+    ClusterSanitizer().check(rt)     # a drained healthy fleet has no findings
+    for w in rt.workers:
+        EngineSanitizer(w.engine).check()

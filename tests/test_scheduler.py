@@ -80,6 +80,7 @@ def test_scheduler_invariants(reqs, n_pages, max_seqs):
         for req, chunk in plan.prefill:
             req.prompt_pos += chunk
             if req.prefill_done:
+                req.prompt_pos -= req.resume_extra   # fold regenerated prefix
                 req.resume_extra = 0
                 req.output.append(0)
                 req.generated += 1
@@ -118,6 +119,7 @@ def test_preemption_recompute_semantics():
         for req, chunk in plan.prefill:
             req.prompt_pos += chunk
             if req.prefill_done:
+                req.prompt_pos -= req.resume_extra   # fold regenerated prefix
                 req.resume_extra = 0
                 req.output.append(0)
                 req.generated += 1
@@ -130,6 +132,21 @@ def test_preemption_recompute_semantics():
     assert preempted_any, "pool was sized to force preemption"
     assert a.state == State.FINISHED and b.state == State.FINISHED
     assert a.generated == 80 and b.generated == 80
+
+
+def test_failed_grow_leaves_no_table_stub():
+    """A grow() that fails for lack of pages must not create an empty table
+    entry for the rid (all-or-nothing): the stub lingered forever when an
+    ``inject`` retry landed on another worker (caught by the sim sanitizer's
+    only-running-requests-hold-pages invariant)."""
+    a = PagedAllocator(n_pages=2, page_size=16)
+    assert a.grow(0, 32)                     # takes both pages
+    assert not a.grow(1, 16)                 # pool exhausted
+    assert 1 not in a._tables
+    assert a.tokens_of(1) == 0
+    # a rid that already holds pages keeps them across a failed grow
+    assert not a.grow(0, 64)
+    assert len(a.table(0)) == 2 and a.tokens_of(0) == 32
 
 
 def test_kv_aware_admission_blocks_overcommit():
