@@ -10,7 +10,9 @@ core in minutes — scaling factors are reported in each row's `derived` field.
 """
 from __future__ import annotations
 
-from typing import Dict
+import os
+import sys
+from typing import Dict, Optional
 
 from repro.core.engine import InferenceEngine
 from repro.scenario import Scenario
@@ -21,10 +23,60 @@ def emit(name: str, value, derived: str = "") -> Dict:
     return {"name": name, "value": value, "derived": derived}
 
 
+# ------------------------------------------------------------ preflight gate
+def preflight(sc: Scenario) -> Scenario:
+    """Refuse to run a spec whose static feasibility check reports errors.
+
+    ``Scenario.check()`` returns only error-severity diagnostics; printing
+    them and exiting non-zero turns a silently-wrong benchmark (a KV pool
+    the workload can never fit, an SLO no hardware meets) into a one-line
+    failure at process start."""
+    diags = sc.check()
+    if diags:
+        for d in diags:
+            print(f"preflight: {sc.name}: {d.format()}",
+                  file=sys.stderr, flush=True)
+        sys.exit(2)
+    return sc
+
+
+# ------------------------------------------------------------- trace output
+# One writer shared by every run in the process: all event streams are
+# concatenated in run order into a single JSONL file (each run ends with a
+# ``run_end`` / ``finish`` tail, so the differ's per-run boundaries survive).
+_trace_writer = None
+
+
+def set_trace_out(path: Optional[str]) -> None:
+    """Route every subsequent benchmark run's event stream to ``path``
+    (None disables tracing and closes the current writer)."""
+    global _trace_writer
+    from repro.trace import JsonlWriter
+    if _trace_writer is not None:
+        _trace_writer.close()
+    _trace_writer = JsonlWriter(path) if path else None
+
+
+def close_trace() -> None:
+    if _trace_writer is not None:
+        _trace_writer.close()
+
+
+def trace_subscribe(log) -> None:
+    """Attach the configured trace writer (if any) to an ``EventLog``."""
+    if _trace_writer is not None:
+        log.subscribe(_trace_writer)
+
+
+if os.environ.get("REPRO_TRACE_OUT"):
+    set_trace_out(os.environ["REPRO_TRACE_OUT"])
+
+
 def run_to_completion(eng: InferenceEngine, reqs, cap_tokens: int = 10 ** 9):
     """Submit every (isl, osl) at t=0 and drain the engine. OSLs are clamped
     to ``cap_tokens`` and to what fits the engine's page pool alongside the
     prompt (the fits-alone invariant)."""
+    trace_subscribe(eng.events)
     capacity = eng.alloc.n_pages * eng.alloc.page_size
     for isl, osl in reqs:
         osl = min(osl, cap_tokens, max(capacity - isl - 2, 1))
@@ -36,4 +88,13 @@ def run_closed(sc: Scenario, cap_tokens: int = 10 ** 9) -> Dict:
     """Compile a scenario's representative replica and run its closed-loop
     trace to completion (the pre-cluster benchmark mode)."""
     from repro.scenario import requests
+    preflight(sc)
     return run_to_completion(sc.to_engine(), requests(sc), cap_tokens)
+
+
+def make_cluster(sc: Scenario, **kwargs):
+    """Preflight-gate a spec and compile its cluster fidelity with the
+    trace writer (if configured) attached."""
+    rt = preflight(sc).to_cluster(**kwargs)
+    trace_subscribe(rt.events)
+    return rt

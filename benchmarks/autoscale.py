@@ -37,7 +37,7 @@ import dataclasses
 from repro.scenario import get_scenario
 from repro.scenario.compile import trace as scenario_trace
 
-from benchmarks._common import emit
+from benchmarks._common import emit, make_cluster
 
 SCENARIO = "ds8b-autoscale-diurnal"
 N_REQUESTS = 200
@@ -48,7 +48,7 @@ SMALL_PHASES = ((12.0, 2.0), (9.0, 10.0), (18.0, 2.0))
 
 
 def _run_cluster(sc):
-    rt = sc.to_cluster()
+    rt = make_cluster(sc)
     rt.submit_trace(scenario_trace(sc))
     m = rt.run(max_steps=4_000_000)
     return rt, m.summary(slo=sc.slo())

@@ -5,7 +5,7 @@ import dataclasses
 
 from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
 
-from benchmarks._common import emit
+from benchmarks._common import emit, make_cluster
 
 BASE = Scenario(
     name="batch-scaling",
@@ -22,7 +22,7 @@ def run():
         sc = dataclasses.replace(
             BASE, name=f"batch-scaling-bs{bs}",
             traffic=dataclasses.replace(BASE.traffic, n_requests=bs))
-        rt = sc.to_cluster()
+        rt = make_cluster(sc)
         rt.submit_trace(sc.trace())
         m = rt.run(max_steps=3_200_000)
         s = m.summary()

@@ -21,7 +21,7 @@ import dataclasses
 
 from repro.scenario import get_scenario
 
-from benchmarks._common import emit
+from benchmarks._common import emit, make_cluster
 
 N_REQUESTS = 150
 RATES = (1, 2, 4, 8, 12, 16, 20)
@@ -53,7 +53,7 @@ def run(n_requests: int = N_REQUESTS, rates=RATES, sanitize: bool = False):
             sc = get_scenario(name)
             sc = dataclasses.replace(sc, traffic=dataclasses.replace(
                 sc.traffic, rate=float(rate), n_requests=n_requests))
-            rt = sc.to_cluster(sanitize=sanitize)
+            rt = make_cluster(sc, sanitize=sanitize)
             rt.submit_trace(sc.trace())
             m = rt.run(max_steps=2_000_000)
             s = m.summary(slo)

@@ -4,7 +4,7 @@ Scenario — a colocated fleet of `dp` replicas fed the same closed-loop
 reasoning workload round-robin."""
 from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
 
-from benchmarks._common import emit
+from benchmarks._common import emit, make_cluster
 
 
 def _fleet_tput(model_name: str, dp: int, n_req: int, seed: int) -> float:
@@ -15,7 +15,7 @@ def _fleet_tput(model_name: str, dp: int, n_req: int, seed: int) -> float:
         traffic=Traffic(process="closed", workload="reasoning",
                         n_requests=n_req, osl_cap=2400, seed=seed),
         routing="round_robin")
-    rt = sc.to_cluster()
+    rt = make_cluster(sc)
     rt.submit_trace(sc.trace())
     m = rt.run(max_steps=400_000 * dp)
     return m.summary()["throughput_tok_s"]

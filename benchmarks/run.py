@@ -1,9 +1,23 @@
 """Benchmark driver — one module per paper table/figure.
-Prints ``name,value,derived`` CSV plus per-module wall time."""
+Prints ``name,value,derived`` CSV plus per-module wall time.
+
+``--trace-out PATH`` streams every run's typed event log (engine and
+cluster fidelities alike) to one JSONL file — replayable through
+``python -m repro.trace diff`` to pin down where two builds diverge."""
+import argparse
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Run the paper-figure benchmark suite.")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="write the typed event stream of every benchmark "
+                         "run to PATH as JSONL")
+    args = ap.parse_args(argv)
+    from benchmarks import _common
+    if args.trace_out:
+        _common.set_trace_out(args.trace_out)
     from benchmarks import (batch_scaling, capacity_trap, disagg_sweep,
                             dp_scaling, frontier, hybrid_sweep, kv_scaling,
                             latency_decoupling, model_scaling,
@@ -30,6 +44,7 @@ def main() -> None:
         print(f"_timing/{name},{(time.time()-t0)*1e6:.0f},us_per_call",
               flush=True)
     print(f"_timing/total,{(time.time()-total0)*1e6:.0f},us_per_call")
+    _common.close_trace()
 
 
 if __name__ == "__main__":

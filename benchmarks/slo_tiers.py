@@ -26,7 +26,7 @@ import dataclasses
 
 from repro.scenario import get_scenario
 
-from benchmarks._common import emit
+from benchmarks._common import emit, make_cluster
 
 N_REQUESTS = 150
 RATES = (2, 4, 8, 12, 16)
@@ -57,7 +57,7 @@ def run(n_requests: int = N_REQUESTS, rates=RATES):
         sc_rate = dataclasses.replace(base, traffic=dataclasses.replace(
             base.traffic, rate=float(rate), n_requests=n_requests))
         for label, sc in (("aware", sc_rate), ("blind", class_blind(sc_rate))):
-            rt = sc.to_cluster()
+            rt = make_cluster(sc)
             rt.submit_trace(sc.trace())
             m = rt.run(max_steps=4_000_000)
             # corrected accounting: runtime-stamped makespan denominator,

@@ -14,6 +14,7 @@ Classic mode — rank parallelism plans for any assigned architecture:
         --hw v5e --devices 256
 """
 import argparse
+import sys
 
 from repro.configs.registry import ALL_MODELS, get_config
 from repro.core import perf_model as pm, planner
@@ -45,6 +46,11 @@ def rank_arch(args):
 
 def three_fidelities(name: str):
     sc = get_scenario(name)
+    diags = sc.check()
+    if diags:
+        for d in diags:
+            print(f"preflight: {sc.name}: {d.format()}", file=sys.stderr)
+        sys.exit(2)
     print(f"== scenario {sc.name}: {sc.model.name} on {sc.n_devices} devices,"
           f" {sc.traffic.process} traffic ==\n")
 

@@ -13,12 +13,23 @@ accounting (fleet-makespan denominator, unfinished-as-miss).
     PYTHONPATH=src python examples/serve_cluster.py
 """
 import dataclasses
+import sys
 
 from repro.scenario import get_scenario
 
 PAIR = ("ds8b-4xh200-colocated", "ds8b-4xh200-disagg")
 MIXED = "ds8b-4xh200-mixed"
 ELASTIC = "ds8b-autoscale-diurnal"
+
+
+def preflight(sc):
+    """Refuse to demo a spec whose static feasibility check errors out."""
+    diags = sc.check()
+    if diags:
+        for d in diags:
+            print(f"preflight: {sc.name}: {d.format()}", file=sys.stderr)
+        sys.exit(2)
+    return sc
 
 
 def show_fleet(s, r):
@@ -36,6 +47,8 @@ def show_fleet(s, r):
 
 
 def main():
+    for name in (*PAIR, MIXED, ELASTIC):
+        preflight(get_scenario(name))
     base = get_scenario(PAIR[0])
     trace = base.trace()          # same trace for both fleets (same seed)
     slo = base.slo("interactive")

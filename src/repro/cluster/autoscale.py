@@ -302,6 +302,13 @@ class AutoscaleController:
         delta = max(self.min_workers - n, min(self.max_workers - n, delta))
         in_cooldown = self._last_action_t is not None \
             and t - self._last_action_t < self.cooldown_s
+        if delta != 0:
+            # the decision itself goes on the event spine (whether or not
+            # cooldown suppresses actuation); the resulting mint/retire
+            # lifecycle events are emitted by the runtime's mutators
+            rt.emitter.emit("scale_decision", t=t, delta=delta,
+                            actuated=not in_cooldown, n_active=len(pool),
+                            n_warming=warming, role=self.role)
         if delta != 0 and not in_cooldown:
             if delta > 0:
                 for _ in range(delta):

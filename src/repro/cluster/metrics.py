@@ -53,11 +53,23 @@ class MigrationRecord:
 
 
 class ClusterMetrics:
-    """Aggregates per-worker MetricsLog + cluster-level migration records.
+    """Aggregates per-worker MetricsLog + cluster-level migration records —
+    derived purely from the fleet event stream (``repro.trace``).
 
-    ``submitted`` is the runtime's routed-request list (shared by reference,
-    so it tracks the run); ``t_end`` is the fleet makespan the runtime stamps
-    after ``run()``."""
+    The runtime subscribes this object to its fleet ``EventLog`` at
+    construction; every record here is a fold over that stream: ``arrival``
+    grows the routed-request list, ``mint``/``join``/``retire``/``drained``
+    become :class:`ScalingEvent` rows, a ``kv_transfer`` paired with its
+    adopter's ``inject`` closes a :class:`MigrationRecord`, and ``run_end``
+    stamps the fleet makespan. Nothing else may mutate this state (lint
+    REP009). ``submitted`` is shared by reference with the runtime, so
+    callers holding either see the same list."""
+
+    # stream lifecycle kind -> ScalingEvent kind ("mint" is recorded as the
+    # historical "scale_up" so scaling_events stay identical to the
+    # pre-stream accounting)
+    _SCALING_KINDS = {"mint": "scale_up", "join": "join",
+                      "retire": "retire", "drained": "drained"}
 
     def __init__(self, workers: List[Worker],
                  submitted: Optional[List[Request]] = None):
@@ -67,13 +79,43 @@ class ClusterMetrics:
         self.submitted: List[Request] = submitted if submitted is not None \
             else []
         self.t_end: Optional[float] = None
+        # stream-derived lifecycle stamps; workers present at t=0 (never
+        # minted/drained on-stream) fall back to their Worker fields
+        self._t_join: Dict[str, float] = {}
+        self._t_retire: Dict[str, float] = {}
+        self._pending_transfers: Dict[int, tuple] = {}
+
+    # ---- the one mutation path: the fleet event stream -------------------
+    def on_event(self, ev):
+        kind = ev.kind
+        if kind == "arrival":
+            self.submitted.append(ev.ref)
+        elif kind in self._SCALING_KINDS:
+            self.scaling_events.append(ScalingEvent(
+                t=ev.t, kind=self._SCALING_KINDS[kind], worker=ev.worker,
+                role=ev.payload["role"], pool_size=ev.payload["pool_size"]))
+            if kind == "mint":
+                self._t_join[ev.worker] = ev.t
+            elif kind == "drained":
+                self._t_retire[ev.worker] = ev.t
+        elif kind == "kv_transfer":
+            self._pending_transfers[ev.rid] = (
+                ev.worker, ev.t, ev.payload["ready"])
+        elif kind == "inject" and ev.rid in self._pending_transfers:
+            src, t_eject, t_ready = self._pending_transfers.pop(ev.rid)
+            self.migrations.append(MigrationRecord(
+                rid=ev.rid, src=src, dst=ev.worker,
+                t_eject=t_eject, t_ready=t_ready, t_delivered=ev.t,
+                context_tokens=ev.payload["context_tokens"]))
+        elif kind == "run_end":
+            self.t_end = ev.t
 
     # ------------------------------------------------------------- collection
-    def note_migration(self, rec: MigrationRecord):
-        self.migrations.append(rec)
+    def _join_t(self, w: Worker) -> float:
+        return self._t_join.get(w.name, w.t_join)
 
-    def note_scaling(self, rec: ScalingEvent):
-        self.scaling_events.append(rec)
+    def _retire_t(self, w: Worker) -> Optional[float]:
+        return self._t_retire.get(w.name, w.t_retire)
 
     def finished_requests(self) -> List[Request]:
         return [r for w in self.workers for r in w.engine.metrics.finished]
@@ -116,7 +158,14 @@ class ClusterMetrics:
         t0 = min((r.arrival for r in reqs), default=0.0)
         if end is None:
             end = t0 + finished_window_s(reqs)
-        return sum(w.active_window(end, t0) for w in self.workers)
+        # per-worker slice mirrors Worker.active_window, but over the
+        # stream-derived mint/drain stamps
+        total = 0.0
+        for w in self.workers:
+            tr = self._retire_t(w)
+            w_end = tr if tr is not None else end
+            total += max(min(w_end, end) - max(self._join_t(w), t0), 0.0)
+        return total
 
     def summary(self, slo: Optional[Union[SLO, SLOMap]] = None,
                 slos: Optional[SLOMap] = None,
@@ -146,8 +195,8 @@ class ClusterMetrics:
                     [p.kv_util for p in tl]) if tl else 0.0,
                 "preemptions": w.engine.sched.n_preemptions,
                 "time_to_saturation_s": sat,
-                "t_join": w.t_join,
-                "t_retire": w.t_retire,
+                "t_join": self._join_t(w),
+                "t_retire": self._retire_t(w),
             }
         out = {
             "n_submitted": len(all_reqs),

@@ -42,11 +42,11 @@ from repro.core import perf_model as pm
 from repro.core.admission import ClassPolicy
 from repro.core.request import Request
 from repro.cluster.arrivals import TraceEntry
-from repro.cluster.metrics import (ClusterMetrics, MigrationRecord,
-                                   ScalingEvent)
+from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.policies import (DispatchPolicy, RoutingPolicy,
                                     make_dispatcher, make_policy)
 from repro.cluster.worker import Worker
+from repro.trace.events import EventEmitter, EventLog
 
 
 @dataclasses.dataclass
@@ -113,14 +113,26 @@ class ClusterRuntime:
         self._retire_requested: Dict[str, float] = {}
         self.autoscaler = autoscaler       # optional AutoscaleController
         self._classes = ClassPolicy(priority=dict(self.cfg.class_priorities))
+        # the fleet event stream: every worker engine's stream forwards into
+        # it, and the runtime emits its own fleet-level transitions (worker
+        # lifecycle, migrations in flight, scaling decisions, run end) with
+        # explicit fleet-clock timestamps. ClusterMetrics is a subscriber —
+        # its scaling/migration/submitted records are derivations, not a
+        # second bookkeeping path.
+        self.events = EventLog()
+        self.emitter = EventEmitter(self.events, clock=lambda: self.makespan)
+        for w in self.workers:
+            w.engine.events.subscribe(self.events.emit)
         self.submitted: List[Request] = []
         self.metrics = ClusterMetrics(self.workers, submitted=self.submitted)
+        self.events.subscribe(self.metrics.on_event)
         # dynamic invariant checks (repro.lint.sanitizer) every loop
         # iteration; read-only, so metrics stay bit-identical
         self._sanitizer = None
         if sanitize:
             from repro.lint.sanitizer import ClusterSanitizer
             self._sanitizer = ClusterSanitizer()
+            self._sanitizer.attach(self)
 
     # ------------------------------------------------------------------- api
     @property
@@ -192,9 +204,12 @@ class ClusterRuntime:
         worker.engine.adopt_rid_source(self._rid_source)
         self.workers.append(worker)
         self._warming.append(worker)
-        self.metrics.note_scaling(ScalingEvent(
-            t=t, kind="scale_up", worker=worker.name, role=worker.role,
-            pool_size=len(self._role_pool(worker.role))))
+        # forward the minted engine's stream into the fleet log BEFORE the
+        # mint event — its first engine event must not beat its lifecycle
+        worker.engine.events.subscribe(self.events.emit)
+        self.emitter.emit("mint", t=t, worker=worker.name, ref=worker,
+                          role=worker.role, load_s=load,
+                          pool_size=len(self._role_pool(worker.role)))
         return worker.t_active
 
     def retire_worker(self, worker: Optional[Worker] = None,
@@ -230,9 +245,8 @@ class ClusterRuntime:
         # decommission decision time before it goes dark
         if not worker.engine.has_work:
             worker.engine.advance_to(t)
-        self.metrics.note_scaling(ScalingEvent(
-            t=t, kind="retire", worker=worker.name, role=worker.role,
-            pool_size=len(pool)))
+        self.emitter.emit("retire", t=t, worker=worker.name, ref=worker,
+                          role=worker.role, pool_size=len(pool))
         self._finish_retirements()
         return worker
 
@@ -244,9 +258,9 @@ class ClusterRuntime:
                 forget = getattr(self.policy, "forget", None)
                 if forget is not None:
                     forget(w.name)     # a reused name must not inherit this
-                self.metrics.note_scaling(ScalingEvent(
-                    t=w.t_retire, kind="drained", worker=w.name, role=w.role,
-                    pool_size=len(self._role_pool(w.role))))
+                self.emitter.emit(
+                    "drained", t=w.t_retire, worker=w.name, ref=w,
+                    role=w.role, pool_size=len(self._role_pool(w.role)))
 
     def _activate_warming(self, upto: float):
         ready = sorted((w for w in self._warming
@@ -257,9 +271,8 @@ class ClusterRuntime:
             w.engine.advance_to(w.t_active)
             pool = self._role_pool(w.role)
             pool.append(w)
-            self.metrics.note_scaling(ScalingEvent(
-                t=w.t_active, kind="join", worker=w.name, role=w.role,
-                pool_size=len(pool)))
+            self.emitter.emit("join", t=w.t_active, worker=w.name, ref=w,
+                              role=w.role, pool_size=len(pool))
 
     def _next_event_time(self) -> Optional[float]:
         """Earliest upcoming fleet event of any kind — worker actions,
@@ -326,9 +339,10 @@ class ClusterRuntime:
                 self._finish_retirements()
             if self._sanitizer is not None:
                 self._sanitizer.check(self)
-        # stamp the fleet makespan so summaries use the true serving window
-        # and can count still-in-flight requests as SLO misses
-        self.metrics.t_end = self.makespan
+        # stamp the fleet makespan (via the stream: ClusterMetrics folds it
+        # into t_end) so summaries use the true serving window and can count
+        # still-in-flight requests as SLO misses
+        self.emitter.emit("run_end", t=self.makespan)
         return self.metrics
 
     # ------------------------------------------------------------- internals
@@ -369,10 +383,11 @@ class ClusterRuntime:
             i = self.policy.pick(
                 self.route_pool, entry.isl, entry.osl,
                 urgency=self._classes.normalized_urgency(entry.slo_class))
-            req = self.route_pool[i].engine.submit(
+            # the engine's "arrival" event (forwarded into the fleet log)
+            # lands the request in self.submitted via ClusterMetrics
+            self.route_pool[i].engine.submit(
                 entry.isl, entry.osl, arrival=entry.arrival,
                 slo_class=entry.slo_class)
-            self.submitted.append(req)
 
     def _harvest_prefill_complete(self, w: Worker):
         done = [r for r in w.engine.sched.running
@@ -386,6 +401,12 @@ class ClusterRuntime:
                 "req": req, "src": w.name,
                 "eject": w.engine.now, "ready": w.engine.now + tt,
             })
+            # migration in flight: the pairing "inject" on the adopter closes
+            # the MigrationRecord in ClusterMetrics
+            self.emitter.emit("kv_transfer", rid=req.rid, ref=req,
+                              t=w.engine.now, worker=w.name,
+                              ready=w.engine.now + tt,
+                              context_tokens=req.context_len)
 
     def _deliver_migrations(self):
         pending = sorted(self._migrating, key=lambda m: m["ready"])
@@ -429,9 +450,7 @@ class ClusterRuntime:
             if not target.engine.inject(req):
                 still.append(m)        # no KV/seq room yet: retry next tick
                 continue
-            self.metrics.note_migration(MigrationRecord(
-                rid=req.rid, src=m["src"], dst=target.name,
-                t_eject=m["eject"], t_ready=ready,
-                t_delivered=target.engine.now,
-                context_tokens=req.context_len))
+            # the adopter's "inject" event (just forwarded into the fleet
+            # log) paired with the pending "kv_transfer" closes the
+            # MigrationRecord in ClusterMetrics — no separate note here
         self._migrating = still

@@ -55,6 +55,10 @@ class Worker:
             raise ValueError(f"unknown worker role {self.role!r}")
         if not self.name:
             self.name = f"{self.role}-{next(_WORKER_SEQ):04d}"
+        # stamp the worker name onto the engine's event stream so fleet-level
+        # consumers (ClusterMetrics, the sanitizer, trace JSONL) can attribute
+        # every engine event to its replica
+        self.engine.emitter.worker = self.name
 
     def active_window(self, t_end: float, t0: float = 0.0) -> float:
         """Seconds this worker was provisioned within [t0, t_end] — the

@@ -22,6 +22,7 @@ from repro.core.kv_cache import PagedAllocator
 from repro.core.metrics import MetricsLog
 from repro.core.request import Request, State
 from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.trace.events import EventEmitter, EventLog
 
 
 @dataclasses.dataclass
@@ -58,9 +59,17 @@ class InferenceEngine:
                 mode=ecfg.admission_mode,
                 classes=ClassPolicy(priority=dict(ecfg.class_priorities),
                                     kv_headroom=ecfg.class_kv_headroom)))
-        self.metrics = MetricsLog()
         self.virtual_clock = virtual_clock
         self.now = 0.0
+        # the event spine (repro.trace): every transition this engine (or
+        # its scheduler/allocator) performs is emitted exactly once on this
+        # log; metrics are a subscriber, not a parallel bookkeeping path
+        self.events = EventLog()
+        self.emitter = EventEmitter(self.events, clock=lambda: self.now)
+        self.alloc.emitter = self.emitter
+        self.sched.emitter = self.emitter
+        self.metrics = MetricsLog()
+        self.events.subscribe(self.metrics.on_event)
         # rid_source: share one counter across engines whose requests may
         # migrate between them (rids key the paged allocator tables)
         self._rid = rid_source if rid_source is not None else itertools.count()
@@ -85,15 +94,17 @@ class InferenceEngine:
                       max_new_tokens=max_new_tokens,
                       arrival=self.now if arrival is None else arrival,
                       slo_class=slo_class)
-        # validation runs BEFORE accounting on both paths — a rejected
-        # request must not linger in metrics.submitted as a phantom SLO miss
+        # validation runs BEFORE the arrival event on both paths — a
+        # rejected request must never reach the stream (the metrics
+        # subscriber would log it as a phantom SLO miss)
         if req.arrival > self.now:
             self.sched.validate(req)     # fail fast, like sched.submit
-            self.metrics.submit(req)
             heapq.heappush(self._pending, (req.arrival, req.rid, req))
         else:
             self.sched.submit(req)       # validates internally
-            self.metrics.submit(req)
+        self.emitter.emit("arrival", rid=req.rid, ref=req, isl=req.isl,
+                          max_new_tokens=req.max_new_tokens,
+                          arrival=req.arrival, slo_class=req.slo_class)
         return req
 
     def issued_rids(self) -> List[int]:
@@ -134,9 +145,10 @@ class InferenceEngine:
             self.sched.running.remove(req)
         elif req in self.sched.waiting:
             self.sched.waiting.remove(req)
-        if req in self.metrics.submitted:
-            self.metrics.submitted.remove(req)
         self.alloc.free(req.rid)
+        self.emitter.emit("eject", rid=req.rid, ref=req,
+                          generated=req.generated,
+                          context_tokens=req.context_len)
         if not self.virtual_clock:
             self.runner.release(req)
         return req
@@ -146,7 +158,8 @@ class InferenceEngine:
         Returns False when no KV/concurrency room (caller retries later)."""
         if not self.sched.inject_running(req):
             return False
-        self.metrics.submit(req)
+        self.emitter.emit("inject", rid=req.rid, ref=req,
+                          context_tokens=req.context_len)
         return True
 
     def step(self) -> bool:
@@ -190,6 +203,8 @@ class InferenceEngine:
                 req.generated += 1
                 self._gen_total += 1
                 completed_prefill.append(req)
+            self.emitter.emit("prefill", rid=req.rid, ref=req, chunk=chunk,
+                              completing=completing)
 
         # --- execute decode batch
         if plan.decode and not self.virtual_clock:
@@ -202,6 +217,9 @@ class InferenceEngine:
                 r.output.append(0)
                 r.generated += 1
         self._gen_total += len(plan.decode)
+        if plan.decode:
+            self.emitter.emit("decode_step",
+                              rids=[r.rid for r in plan.decode])
 
         # --- advance the clock
         if self.virtual_clock:
@@ -230,7 +248,9 @@ class InferenceEngine:
                 self.sched.finish(req)
                 if not self.virtual_clock:
                     self.runner.release(req)
-                self.metrics.finish(req)
+                self.emitter.emit("finish", rid=req.rid, ref=req,
+                                  generated=req.generated,
+                                  n_preemptions=req.n_preemptions)
 
         # --- preempted requests lose their runner slot
         if not self.virtual_clock:
@@ -240,8 +260,8 @@ class InferenceEngine:
         # --- telemetry + autotune
         self._steps += 1
         if self._steps % self.ecfg.snapshot_every == 0:
-            self.metrics.snapshot(
-                t=self.now, running=len(self.sched.running),
+            self.emitter.emit(
+                "step", running=len(self.sched.running),
                 waiting=len(self.sched.waiting),
                 kv_util=self.alloc.utilization(),
                 kv_frag=self.alloc.internal_fragmentation(),

@@ -21,6 +21,9 @@ class PagedAllocator:
         self._tables: Dict[int, List[int]] = {}
         self._used_tokens: Dict[int, int] = {}
         self.peak_used_pages = 0
+        # event spine (repro.trace): the owning engine wires its emitter in
+        # so every page movement is on the stream (kv_alloc / kv_free)
+        self.emitter = None
 
     # ---- queries ----------------------------------------------------------
     @property
@@ -68,12 +71,17 @@ class PagedAllocator:
         self._tables[rid] = have
         self._used_tokens[rid] = new_total_tokens
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        if need > 0 and self.emitter is not None:
+            self.emitter.emit("kv_alloc", rid=rid, pages=need,
+                              held=len(have), tokens=new_total_tokens)
         return True
 
     def free(self, rid: int) -> int:
         pages = self._tables.pop(rid, [])
         self._free.extend(pages)
         self._used_tokens.pop(rid, None)
+        if pages and self.emitter is not None:
+            self.emitter.emit("kv_free", rid=rid, pages=len(pages))
         return len(pages)
 
     def reset(self):

@@ -195,23 +195,39 @@ class TimelinePoint:
 
 
 class MetricsLog:
+    """Per-engine accounting, derived purely from the event spine.
+
+    The engine subscribes this log to its ``repro.trace`` event stream at
+    construction; every list here is a fold over that stream (``arrival`` /
+    ``inject`` grow the submitted log, ``eject`` shrinks it — per-engine SLO
+    accounting covers requests the engine is responsible for finishing —
+    ``finish`` appends to ``finished``, ``step`` appends a
+    ``TimelinePoint``). Nothing else may mutate this state (lint REP009)."""
+
     def __init__(self):
         self.timeline: List[TimelinePoint] = []
         self.submitted: List[Request] = []
         self.finished: List[Request] = []
         self.preemption_events: List[float] = []
-        self.throttle_events: List[float] = []
 
-    def snapshot(self, **kw):
-        self.timeline.append(TimelinePoint(**kw))
-
-    def submit(self, req: Request):
-        """Record a submission — unfinished requests must be visible to the
-        horizon-based SLO accounting (they are misses, not omissions)."""
-        self.submitted.append(req)
-
-    def finish(self, req: Request):
-        self.finished.append(req)
+    # ---- the one mutation path: the event stream -------------------------
+    def on_event(self, ev):
+        kind = ev.kind
+        if kind == "arrival" or kind == "inject":
+            # unfinished requests must be visible to the horizon-based SLO
+            # accounting (they are misses, not omissions)
+            self.submitted.append(ev.ref)
+        elif kind == "eject":
+            # the adopter records it on inject; fleet-level accounting
+            # lives in ClusterMetrics
+            if ev.ref in self.submitted:
+                self.submitted.remove(ev.ref)
+        elif kind == "finish":
+            self.finished.append(ev.ref)
+        elif kind == "preempt":
+            self.preemption_events.append(ev.t)
+        elif kind == "step":
+            self.timeline.append(TimelinePoint(t=ev.t, **ev.payload))
 
     # ---- summaries ---------------------------------------------------------
     def summary(self, horizon: Optional[float] = None) -> Dict:

@@ -62,6 +62,9 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.n_preemptions = 0
+        # event spine (repro.trace): the owning engine wires its emitter in
+        # — admit/resume/preempt are emitted HERE, at the transition itself
+        self.emitter = None
 
     # ------------------------------------------------------------------ api
     def validate(self, req: Request):
@@ -165,11 +168,18 @@ class Scheduler:
             if chunk <= 0 or not self.alloc.grow(cand.rid, chunk):
                 break
             self.waiting.popleft()
+            resumed = cand.state is State.PREEMPTED
             cand.state = State.RUNNING
             self.running.append(cand)
             admitted.append(cand)
             prefill.append((cand, chunk))
             budget -= chunk
+            if self.emitter is not None:
+                if resumed:
+                    self.emitter.emit("resume", rid=cand.rid, ref=cand,
+                                      resume_extra=cand.resume_extra)
+                else:
+                    self.emitter.emit("admit", rid=cand.rid, ref=cand)
 
         return StepPlan(decode=decode, prefill=prefill, preempted=preempted,
                         admitted=admitted)
@@ -198,6 +208,11 @@ class Scheduler:
         return max(cands, key=lambda r: (-urg(r.slo_class), r.arrival, r.rid))
 
     def _preempt(self, req: Request, out: List[Request]):
+        if self.emitter is not None:
+            # capture the victim's cost before the recompute reset wipes it
+            self.emitter.emit("preempt", rid=req.rid, ref=req,
+                              generated=req.generated,
+                              lost_tokens=req.context_len)
         self.alloc.free(req.rid)
         self.running.remove(req)
         # recompute mode: the whole context (prompt + generated-so-far) must

@@ -16,6 +16,7 @@ Catalog (see docs/lint.md for the history behind each):
   REP006  ``==`` / ``!=`` on virtual-time floats
   REP007  RoutingPolicy / DispatchPolicy / AutoscalePolicy signature drift
   REP008  frozen-spec dataclass mutated outside ``__post_init__``
+  REP009  MetricsLog / ClusterMetrics state mutated outside the event spine
 """
 from __future__ import annotations
 
@@ -415,9 +416,77 @@ class FrozenSpecMutation(Rule):
                                           "with dataclasses.replace")
 
 
+class MetricsBypass(Rule):
+    """REP009 — metrics objects are fold-downs of the ``repro.trace`` event
+    stream: their ONLY mutation path is ``on_event``, driven by the
+    subscribed ``EventLog``. Sim code that pokes metrics state directly
+    (calling the retired ``submit``/``finish``/``snapshot``/``note_*``
+    mutators, assigning metrics attributes, or appending to metrics
+    collections) re-creates the parallel-bookkeeping split the event spine
+    exists to kill: the stream and the summaries silently disagree and
+    ``repro.trace diff`` can no longer vouch for a run. Emit an event from
+    the one place that performs the transition instead."""
+    rule_id = "REP009"
+    title = "metrics state mutated outside the event spine"
+    paths = ("repro/core/", "repro/cluster/", "repro/scenario/")
+    # the consumer modules themselves: on_event's folds live here
+    EXCLUDE = ("repro/core/metrics.py", "repro/cluster/metrics.py")
+    MUTATORS = ("submit", "finish", "snapshot", "on_event",
+                "note_migration", "note_scaling")
+    COLLECTION_MUT = ("append", "remove", "extend", "insert", "pop",
+                      "clear", "update", "add")
+
+    def applies_to(self, path: str) -> bool:
+        p = path.replace("\\", "/")
+        if any(tok in p for tok in self.EXCLUDE):
+            return False
+        return super().applies_to(p)
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        parts = name.split(".")
+        last = parts[-1]
+        if len(parts) >= 2 and parts[-2] == "metrics" \
+                and last in self.MUTATORS:
+            self.report(node, f"{name}() mutates metrics state directly; "
+                              "accounting derives from the event stream — "
+                              "emit the transition's event instead")
+        elif last in ("note_migration", "note_scaling"):
+            self.report(node, f"{name}(): the note_* mutators are retired; "
+                              "scaling/migration records fold out of "
+                              "mint/join/retire/drained and "
+                              "kv_transfer/inject events")
+        elif len(parts) >= 3 and parts[-3] == "metrics" \
+                and last in self.COLLECTION_MUT:
+            self.report(node, f"{name}() mutates a metrics collection "
+                              "behind the event stream's back; emit the "
+                              "transition's event instead")
+        self.generic_visit(node)
+
+    def _check_target(self, node: ast.AST, target: ast.AST):
+        # flag `x.metrics.attr = ...` / `x.metrics.attr += ...`, but not
+        # `self.metrics = ...` (wiring the consumer up is construction)
+        if isinstance(target, ast.Attribute) \
+                and isinstance(target.value, ast.Attribute) \
+                and target.value.attr == "metrics":
+            self.report(node, f"assignment to "
+                              f"{_dotted(target) or target.attr!r} bypasses "
+                              "the event stream; metrics state is a fold "
+                              "over events — emit one instead")
+
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            self._check_target(node, t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._check_target(node, node.target)
+        self.generic_visit(node)
+
+
 ALL_RULES = (UnseededRNG, WallClock, UnorderedIteration, IdAsKey,
              MutableDefault, FloatTimeEquality, PolicyConformance,
-             FrozenSpecMutation)
+             FrozenSpecMutation, MetricsBypass)
 
 
 def default_rules() -> List[Rule]:

@@ -43,18 +43,94 @@ class EngineSanitizer:
     - the submitted log covers every queued/pending request (eject/inject
       keep the log consistent), finished requests stayed logged, and no
       rid was logged twice.
+
+    The sanitizer is also a *subscriber* of the engine's event spine
+    (``repro.trace``): it folds ``kv_alloc``/``kv_free`` into a page-count
+    mirror and replays each rid's lifecycle (arrival -> admit -> preempt ->
+    resume -> finish / eject / inject) as a state machine, failing at the
+    first event that contradicts the stream's own history — a transition
+    the stream missed (or double-emitted) shows up as a mirror/state
+    divergence even when the engine state itself still looks consistent.
     """
+
+    _LIFECYCLE_OK = {
+        "admit": ("queued",),
+        "resume": ("preempted",),
+        "preempt": ("running",),
+        "finish": ("running",),
+    }
 
     def __init__(self, engine, name: str = "engine"):
         self.engine = engine
         self.name = name
         self._last_now: Optional[float] = None
+        # stream mirrors, seeded from the allocator at attach time so an
+        # engine sanitized mid-run (ClusterSanitizer attaches lazily) does
+        # not misread pre-existing tables as stream divergence
+        self._stream_pages: Dict[int, int] = {
+            rid: len(t) for rid, t in engine.alloc._tables.items()}
+        self._stream_state: Dict[int, str] = {}
+        self._last_ev_t: Optional[float] = None
+        engine.events.subscribe(self.on_event)
 
     def check(self):
         self._check_clock()
         self._check_kv_conservation()
         self._check_queues()
         self._check_submitted_log()
+        # runs LAST: engine-state checks above report corruption with their
+        # own (more specific) messages first
+        self._check_stream_mirror()
+
+    # --------------------------------------------------------- stream mirror
+    def on_event(self, ev):
+        if self._last_ev_t is not None and ev.t < self._last_ev_t - 1e-12:
+            _fail(self.name, f"event stream clock moved backwards: "
+                             f"{self._last_ev_t} -> {ev.t} ({ev.kind})")
+        self._last_ev_t = ev.t
+        kind, rid = ev.kind, ev.rid
+        if kind == "kv_alloc":
+            have = self._stream_pages.get(rid, 0) + ev.payload["pages"]
+            self._stream_pages[rid] = have
+            if have != ev.payload["held"]:
+                _fail(self.name, f"kv_alloc stream mirror for rid {rid} has "
+                                 f"{have} pages, event says "
+                                 f"{ev.payload['held']}")
+        elif kind == "kv_free":
+            have = self._stream_pages.pop(rid, 0)
+            if have != ev.payload["pages"]:
+                _fail(self.name, f"kv_free of rid {rid} released "
+                                 f"{ev.payload['pages']} pages, stream "
+                                 f"mirror held {have}")
+        elif kind == "arrival":
+            self._stream_state[rid] = "queued"
+        elif kind == "inject":
+            self._stream_state[rid] = "running"
+        elif kind == "eject":
+            self._stream_state.pop(rid, None)
+        elif kind in self._LIFECYCLE_OK:
+            # lifecycle is replayed only for rids whose arrival/inject the
+            # stream itself carried (attach-time in-flight rids are exempt)
+            state = self._stream_state.get(rid)
+            if state is not None:
+                if state not in self._LIFECYCLE_OK[kind]:
+                    _fail(self.name, f"stream lifecycle of rid {rid}: "
+                                     f"{kind!r} while {state!r} (allowed "
+                                     f"from {self._LIFECYCLE_OK[kind]})")
+                self._stream_state[rid] = "preempted" \
+                    if kind == "preempt" else "running"
+                if kind == "finish":
+                    del self._stream_state[rid]
+
+    def _check_stream_mirror(self):
+        actual = {rid: len(t)
+                  for rid, t in self.engine.alloc._tables.items()}
+        if self._stream_pages != actual:
+            diff = {rid: (self._stream_pages.get(rid), actual.get(rid))
+                    for rid in set(self._stream_pages) | set(actual)
+                    if self._stream_pages.get(rid) != actual.get(rid)}
+            _fail(self.name, f"KV stream mirror diverged from the allocator "
+                             f"(rid: stream vs actual pages): {diff}")
 
     # ------------------------------------------------------------ invariants
     def _check_clock(self):
@@ -156,13 +232,30 @@ class ClusterSanitizer:
     - in-flight migrations hold no KV pages on any engine (the pages were
       freed at eject, the target allocates at inject) and have
       ``ready >= eject``;
-    - the fleet submitted log is duplicate-free.
+    - the fleet submitted log is duplicate-free;
+    - the fleet event stream's scaling lifecycle is ordered per worker:
+      ``mint -> join -> retire -> drained``, never skipping backwards (a
+      replica that drains without retiring, or joins twice, is a runtime
+      bookkeeping bug the summary-level checks cannot see).
     """
+
+    _STAGE = {"mint": 0, "join": 1, "retire": 2, "drained": 3}
 
     def __init__(self):
         self._engines: Dict[str, EngineSanitizer] = {}
+        self._stages: Dict[str, int] = {}
+        self._subscribed = False
+
+    def attach(self, rt):
+        """Subscribe to the fleet stream. The runtime calls this at
+        construction so no lifecycle event predates the subscription;
+        ``check`` self-attaches for standalone use."""
+        if not self._subscribed:
+            rt.events.subscribe(self.on_event)
+            self._subscribed = True
 
     def check(self, rt):
+        self.attach(rt)
         for w in rt.workers:
             es = self._engines.get(w.name)
             if es is None:
@@ -173,6 +266,24 @@ class ClusterSanitizer:
         self._check_lifecycle(rt)
         self._check_migrations(rt)
         self._check_submitted(rt)
+
+    def on_event(self, ev):
+        stage = self._STAGE.get(ev.kind)
+        if stage is None:
+            return
+        # workers present at t=0 never mint on-stream: their first lifecycle
+        # event is a retire, which is fine — only going backwards (or
+        # joining un-minted, draining un-retired) is a violation
+        prev = self._stages.get(ev.worker)
+        if stage in (1, 3) and prev != stage - 1:
+            _fail("fleet", f"worker {ev.worker!r} scaling lifecycle: "
+                           f"{ev.kind!r} without a preceding "
+                           f"{'mint' if stage == 1 else 'retire'} "
+                           f"on the stream")
+        if prev is not None and stage <= prev:
+            _fail("fleet", f"worker {ev.worker!r} scaling lifecycle moved "
+                           f"backwards: stage {prev} -> {ev.kind!r}")
+        self._stages[ev.worker] = stage
 
     # ------------------------------------------------------------ invariants
     def _check_fleet(self, rt):

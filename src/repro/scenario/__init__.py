@@ -11,6 +11,8 @@ from repro.scenario.compile import (Resolved, ResolvedGroup, aggregate_plan,
                                     estimate_fleet, planner_workload,
                                     requests, resolve, to_cluster, to_engine,
                                     to_plan, trace)
+from repro.scenario.crosscheck import (CrosscheckReport, bounds_for,
+                                       crosscheck)
 from repro.scenario.registry import (SCENARIOS, get_scenario,
                                      register_scenario, variant)
 from repro.scenario.spec import (AUTOSCALE_POLICIES, HARDWARE, PROCESSES,
@@ -27,5 +29,6 @@ __all__ = [
     "Resolved", "ResolvedGroup", "resolve", "aggregate_plan",
     "estimate_fleet", "planner_workload", "trace", "requests",
     "to_plan", "to_engine", "to_cluster",
+    "crosscheck", "CrosscheckReport", "bounds_for",
     "SCENARIOS", "get_scenario", "register_scenario", "variant",
 ]

@@ -554,3 +554,11 @@ class Scenario:
     def trace(self):
         from repro.scenario.compile import trace
         return trace(self)
+
+    def crosscheck(self, n_requests: int = 40):
+        """Dynamic cross-fidelity consistency: run plan/engine/cluster on a
+        small closed-loop shrink of this spec and flag goodput/latency
+        ratios outside per-scenario bounds as lint-style ``Finding`` rows
+        (``repro.scenario.crosscheck``)."""
+        from repro.scenario.crosscheck import crosscheck
+        return crosscheck(self, n_requests=n_requests)

@@ -147,6 +147,38 @@ def test_rep008_clean_inside_post_init():
     assert "REP008" not in _ids(src, path=OTHER_PATH)
 
 
+def test_rep009_fires_on_direct_metrics_mutation():
+    fires = (
+        "eng.metrics.finish(req, t=1.0)\n",
+        "self.metrics.on_event(ev)\n",
+        "rt.metrics.note_migration(rec)\n",
+        "note_scaling(t, 'join', w)\n",          # any receiver
+        "eng.metrics.preemption_events.append(2.0)\n",
+        "eng.metrics.t_end = 5.0\n",
+        "eng.metrics.n_steps += 1\n",
+    )
+    for src in fires:
+        assert "REP009" in _ids(src), src
+
+
+def test_rep009_clean_on_reads_and_consumer_modules():
+    clean = (
+        "s = eng.metrics.summary()\n",
+        "x = eng.metrics.t_end\n",
+        "log.subscribe(self.metrics.on_event)\n",   # subscription, not call
+        "self.metrics = MetricsLog()\n",            # wiring the consumer
+    )
+    for src in clean:
+        assert "REP009" not in _ids(src), src
+    # the two stream-consumer modules are the one legal mutation site
+    mut = "self.finished.append(ev.ref)\nself.metrics.on_event(ev)\n"
+    assert "REP009" not in _ids(mut, path="repro/core/metrics.py")
+    assert "REP009" not in _ids(mut, path="repro/cluster/metrics.py")
+    # and launch-side scripts are out of scope entirely
+    assert "REP009" not in _ids("eng.metrics.finish(r, t=0)\n",
+                                path=OTHER_PATH)
+
+
 # ------------------------------------------------------------- suppressions
 def test_suppression_with_reason_silences_finding():
     src = "import time\nt = time.time()  # lint: disable=REP002 (measuring)\n"

@@ -1,0 +1,212 @@
+"""repro.trace: the typed event spine. Event/EventLog semantics, JSONL
+round-trip, replay determinism across all three cluster shapes (colocated,
+disaggregated, autoscaled), the first-divergence differ (library + CLI),
+the benchmark trace/preflight plumbing, and the cross-fidelity crosscheck."""
+import dataclasses
+import os
+import sys
+
+import pytest
+
+from repro.scenario import (SCENARIOS, bounds_for, crosscheck, get_scenario,
+                            variant)
+from repro.trace import (KINDS, Event, EventLog, diff_events, dump_events,
+                         load_events)
+from repro.trace.__main__ import main as trace_main
+
+COLOCATED = "ds8b-4xh200-colocated"
+DISAGG = "ds8b-4xh200-disagg"
+ELASTIC = "ds8b-autoscale-diurnal"
+
+
+def _shrunk(name, n=14, **changes):
+    sc = get_scenario(name)
+    return dataclasses.replace(
+        sc, traffic=dataclasses.replace(sc.traffic, n_requests=n, **changes))
+
+
+def _cluster_events(sc, trace=None):
+    rt = sc.to_cluster()
+    rt.events.enable_recording()
+    rt.submit_trace(sc.trace() if trace is None else trace)
+    rt.run()
+    return rt.events.events
+
+
+# ------------------------------------------------------------ event basics
+def test_event_is_frozen_and_kind_checked():
+    ev = Event(t=1.0, kind="arrival", rid=3)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ev.t = 2.0
+    with pytest.raises(ValueError, match="unknown event kind"):
+        Event(t=0.0, kind="teleport")
+
+
+def test_event_to_dict_excludes_live_ref():
+    sentinel = object()
+    ev = Event(t=0.5, kind="finish", rid=1, worker="dec0",
+               payload={"osl": 8}, ref=sentinel)
+    d = ev.to_dict()
+    assert d == {"t": 0.5, "kind": "finish", "rid": 1, "worker": "dec0",
+                 "payload": {"osl": 8}}
+    # ref is also excluded from equality: same transition, same event
+    assert ev == Event(t=0.5, kind="finish", rid=1, worker="dec0",
+                       payload={"osl": 8})
+
+
+def test_eventlog_recording_is_opt_in_subscribers_always_fire():
+    log = EventLog()
+    seen = []
+    log.subscribe(seen.append)
+    log.emit(Event(t=0.0, kind="arrival", rid=1))
+    assert log.events is None and not log.recording and len(seen) == 1
+    log.enable_recording()
+    log.emit(Event(t=1.0, kind="finish", rid=1))
+    assert [e.kind for e in log.events] == ["finish"] and len(seen) == 2
+    log.unsubscribe(seen.append)
+    log.emit(Event(t=2.0, kind="run_end"))
+    assert len(seen) == 2
+
+
+# --------------------------------------------------- replay determinism
+@pytest.mark.parametrize("name,n", [(COLOCATED, 14), (DISAGG, 14),
+                                    (ELASTIC, 40)])
+def test_same_scenario_same_seed_is_event_identical(name, n):
+    """The headline guarantee: one Scenario + seed, run twice, yields the
+    same stream event for event — routing, preemption, migration and
+    scaling decisions included, not just the same aggregates."""
+    a = _cluster_events(_shrunk(name, n))
+    b = _cluster_events(_shrunk(name, n))
+    res = diff_events(a, b)
+    assert res.identical, res.report()
+    assert len(a) > 0
+    kinds = {e.kind for e in a}
+    assert kinds <= set(KINDS)
+    assert "arrival" in kinds and "finish" in kinds
+
+
+def test_engine_stream_forwards_into_fleet_stream_with_worker_names():
+    evs = _cluster_events(_shrunk(COLOCATED))
+    named = [e for e in evs if e.kind in ("arrival", "finish", "decode_step")]
+    assert named and all(e.worker for e in named)
+
+
+def test_perturbed_seed_diverges_with_readable_first_divergence():
+    base = _shrunk(COLOCATED)
+    a = _cluster_events(base)
+    pert = dataclasses.replace(
+        base, traffic=dataclasses.replace(base.traffic, seed=base.traffic.seed + 1))
+    b = _cluster_events(pert)
+    res = diff_events(a, b, label_a="seed0", label_b="seed1")
+    assert not res.identical and res.index is not None
+    report = res.report()
+    assert "diverge" in report and "seed0" in report and "seed1" in report
+    # the shared prefix really is shared: everything before index matches
+    for i in range(res.index):
+        assert a[i].to_dict() == b[i].to_dict()
+
+
+# ----------------------------------------------------- jsonl + differ CLI
+def test_jsonl_roundtrip_bit_exact(tmp_path):
+    evs = _cluster_events(_shrunk(COLOCATED, 6))
+    p1, p2 = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    assert dump_events(evs, p1) == len(evs)
+    dump_events(evs, p2)
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    assert load_events(p1) == [e.to_dict() for e in evs]
+
+
+def test_differ_cli_exit_codes(tmp_path, capsys):
+    base = _shrunk(COLOCATED, 6)
+    evs = _cluster_events(base)
+    pert = dataclasses.replace(
+        base, traffic=dataclasses.replace(base.traffic, seed=99))
+    a = str(tmp_path / "a.jsonl")
+    b = str(tmp_path / "b.jsonl")
+    c = str(tmp_path / "c.jsonl")
+    dump_events(evs, a)
+    dump_events(evs, b)
+    dump_events(_cluster_events(pert), c)
+    assert trace_main(["diff", a, b]) == 0
+    assert "identical" in capsys.readouterr().out
+    assert trace_main(["diff", a, c]) == 1
+    assert "diverge" in capsys.readouterr().out
+    assert trace_main(["diff", a, str(tmp_path / "missing.jsonl")]) == 2
+
+
+# ------------------------------------------- benchmark plumbing + preflight
+def _common():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    if os.path.abspath(root) not in (os.path.abspath(p) for p in sys.path):
+        sys.path.insert(0, root)
+    from benchmarks import _common as mod
+    return mod
+
+
+def test_benchmark_preflight_exits_nonzero_on_bad_spec(capsys):
+    mod = _common()
+    bad = variant(COLOCATED, fleet=(dataclasses.replace(
+        SCENARIOS[COLOCATED].fleet[0], n_pages=64),))
+    with pytest.raises(SystemExit) as exc:
+        mod.preflight(bad)
+    assert exc.value.code == 2
+    assert "kv_pool_too_small" in capsys.readouterr().err
+    good = _shrunk(COLOCATED, 6)
+    assert mod.preflight(good) is good
+
+
+def test_benchmark_trace_out_writes_loadable_stream(tmp_path):
+    mod = _common()
+    out = str(tmp_path / "bench.jsonl")
+    mod.set_trace_out(out)
+    try:
+        rt = mod.make_cluster(_shrunk(COLOCATED, 6))
+        rt.submit_trace(_shrunk(COLOCATED, 6).trace())
+        rt.run()
+    finally:
+        mod.set_trace_out(None)
+    rows = load_events(out)
+    assert rows and {r["kind"] for r in rows} <= set(KINDS)
+    assert any(r["kind"] == "run_end" for r in rows)
+
+
+# ------------------------------------------------------------- crosscheck
+def test_crosscheck_passes_on_registry_scenario():
+    rep = crosscheck(get_scenario(COLOCATED))
+    assert rep.ok, [f.format() for f in rep.findings]
+    assert "tput_vs_engine" in rep.ratios
+    for metric, (r, cv, rv) in rep.ratios.items():
+        lo, hi = bounds_for(COLOCATED)[metric]
+        assert lo <= r <= hi
+
+
+def test_crosscheck_flags_seeded_misconfiguration():
+    """One replica with a starved KV pool that still passes the static
+    check: each fidelity tolerates it alone, the fidelities disagreeing
+    about the same spec is what exposes it."""
+    base = SCENARIOS[COLOCATED]
+    g = base.fleet[0]
+    sc = variant(COLOCATED, routing="round_robin",
+                 fleet=(dataclasses.replace(g, count=3),
+                        dataclasses.replace(g, count=1, n_pages=459,
+                                            admission="naive", prefix="bad")))
+    assert sc.check() == []          # statically clean — that's the point
+    rep = crosscheck(sc)
+    assert not rep.ok
+    assert "XCHK001" in [f.rule_id for f in rep.findings]
+    assert all(f.severity == "error" for f in rep.findings)
+
+
+def test_crosscheck_static_failure_is_xchk000():
+    bad = variant(COLOCATED, fleet=(dataclasses.replace(
+        SCENARIOS[COLOCATED].fleet[0], n_pages=64),))
+    rep = crosscheck(bad)
+    assert not rep.ok and rep.ratios == {}
+    assert [f.rule_id for f in rep.findings] == ["XCHK000"]
+
+
+def test_bounds_for_merges_per_scenario_overrides():
+    merged = bounds_for(DISAGG)
+    assert merged["goodput_vs_engine"][0] < \
+        bounds_for(COLOCATED)["goodput_vs_engine"][0]
+    assert set(merged) == set(bounds_for(COLOCATED))
