@@ -72,16 +72,52 @@ if os.environ.get("REPRO_TRACE_OUT"):
     set_trace_out(os.environ["REPRO_TRACE_OUT"])
 
 
-def run_to_completion(eng: InferenceEngine, reqs, cap_tokens: int = 10 ** 9):
+# --------------------------------------------------------- bottleneck report
+# ``run.py --report`` / REPRO_OBS_REPORT=1: after each benchmark run, fold
+# its event stream through repro.obs and print the bottleneck report (regime
+# attribution + latency decomposition). Implemented as a pure subscriber tap
+# on the run's EventLog, so enabling it cannot perturb any metric.
+_report_enabled = False
+
+
+def set_report(enabled: bool) -> None:
+    global _report_enabled
+    _report_enabled = enabled
+
+
+def _obs_tap(log):
+    """Recording tap for the report (None when reporting is off)."""
+    if not _report_enabled:
+        return None
+    rows: list = []
+    log.subscribe(rows.append)
+    return rows
+
+
+def _obs_print(rows, title: str) -> None:
+    from repro.obs import bottleneck_report, render_text
+    print(render_text(bottleneck_report(rows), title=title), flush=True)
+
+
+if os.environ.get("REPRO_OBS_REPORT"):
+    set_report(True)
+
+
+def run_to_completion(eng: InferenceEngine, reqs, cap_tokens: int = 10 ** 9,
+                      title: str = "engine"):
     """Submit every (isl, osl) at t=0 and drain the engine. OSLs are clamped
     to ``cap_tokens`` and to what fits the engine's page pool alongside the
     prompt (the fits-alone invariant)."""
     trace_subscribe(eng.events)
+    rows = _obs_tap(eng.events)
     capacity = eng.alloc.n_pages * eng.alloc.page_size
     for isl, osl in reqs:
         osl = min(osl, cap_tokens, max(capacity - isl - 2, 1))
         eng.submit(int(isl), int(osl), arrival=0.0)
-    return eng.run(max_steps=400_000).summary()
+    summary = eng.run(max_steps=400_000).summary()
+    if rows:
+        _obs_print(rows, title)
+    return summary
 
 
 def run_closed(sc: Scenario, cap_tokens: int = 10 ** 9) -> Dict:
@@ -89,12 +125,37 @@ def run_closed(sc: Scenario, cap_tokens: int = 10 ** 9) -> Dict:
     trace to completion (the pre-cluster benchmark mode)."""
     from repro.scenario import requests
     preflight(sc)
-    return run_to_completion(sc.to_engine(), requests(sc), cap_tokens)
+    return run_to_completion(sc.to_engine(), requests(sc), cap_tokens,
+                             title=sc.name)
+
+
+def run_closed_with_report(sc: Scenario, cap_tokens: int = 10 ** 9):
+    """``run_closed`` plus the ``repro.obs`` bottleneck report of the same
+    run, unconditionally (benchmarks that publish regime-attribution rows
+    need the report as *data*, independent of the ``--report`` console
+    toggle). Returns ``(summary, report_dict)``."""
+    from repro.obs import bottleneck_report
+    from repro.scenario import requests
+    preflight(sc)
+    eng = sc.to_engine()
+    rows: list = []
+    eng.events.subscribe(rows.append)
+    summary = run_to_completion(eng, requests(sc), cap_tokens, title=sc.name)
+    return summary, bottleneck_report(rows)
 
 
 def make_cluster(sc: Scenario, **kwargs):
     """Preflight-gate a spec and compile its cluster fidelity with the
-    trace writer (if configured) attached."""
+    trace writer (if configured) and the report tap attached. Cluster
+    benchmarks call ``rt.run()`` themselves, so the report prints on the
+    stream's own ``run_end`` event (the tap subscribes first, so the full
+    stream — run_end included — is already recorded when it fires)."""
     rt = preflight(sc).to_cluster(**kwargs)
     trace_subscribe(rt.events)
+    rows = _obs_tap(rt.events)
+    if rows is not None:
+        def _on_end(ev, _rows=rows, _name=sc.name):
+            if ev.kind == "run_end":
+                _obs_print(_rows, _name)
+        rt.events.subscribe(_on_end)
     return rt

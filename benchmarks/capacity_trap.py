@@ -1,12 +1,17 @@
 """Fig 2 + Obs 1 — the Capacity Trap: concurrency sweep for DS-8B on one
 H200. Throughput rises with concurrency only until KV saturates; past that,
 preemption storms collapse it. Each sweep point is the same Scenario with a
-different per-replica concurrency cap."""
+different per-replica concurrency cap.
+
+Each point also publishes its ``repro.obs`` regime attribution: the sweep
+should read ``compute_bound`` below the knee and flip to ``capacity_bound``
+(preemption storms / KV-throttled admission) past it — the trap made
+visible as a label, not just a throughput dip."""
 import dataclasses
 
 from repro.scenario import ModelRef, Scenario, Traffic, WorkerGroup
 
-from benchmarks._common import emit, run_closed
+from benchmarks._common import emit, run_closed_with_report
 
 BASE = Scenario(
     name="capacity-trap",
@@ -23,7 +28,7 @@ def run(n_requests: int = 400):
             BASE, name=f"capacity-trap-seqs{max_seqs}",
             fleet=(dataclasses.replace(BASE.fleet[0], max_seqs=max_seqs),),
             traffic=dataclasses.replace(BASE.traffic, n_requests=n_requests))
-        s = run_closed(sc)
+        s, rep = run_closed_with_report(sc)
         scale = f"n={n_requests};1xH200;sim"
         rows.append(emit(f"capacity_trap/tput_tok_s/seqs={max_seqs}",
                          round(s["gen_throughput_tok_s"], 1), scale))
@@ -33,6 +38,12 @@ def run(n_requests: int = 400):
                          s["preemptions"], scale))
         rows.append(emit(f"capacity_trap/recomputed_tokens/seqs={max_seqs}",
                          s["recomputed_tokens"], scale))
+        reg = rep["regimes"]
+        rows.append(emit(f"capacity_trap/dominant_regime/seqs={max_seqs}",
+                         reg["dominant"], scale))
+        rows.append(emit(
+            f"capacity_trap/capacity_bound_frac/seqs={max_seqs}",
+            round(reg["fractions"]["capacity_bound"], 3), scale))
     return rows
 
 

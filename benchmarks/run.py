@@ -3,7 +3,11 @@ Prints ``name,value,derived`` CSV plus per-module wall time.
 
 ``--trace-out PATH`` streams every run's typed event log (engine and
 cluster fidelities alike) to one JSONL file — replayable through
-``python -m repro.trace diff`` to pin down where two builds diverge."""
+``python -m repro.trace diff`` to pin down where two builds diverge.
+
+``--report`` (or REPRO_OBS_REPORT=1) prints the ``repro.obs`` bottleneck
+report — regime attribution and exact latency decomposition — after each
+benchmark run (see docs/obs.md)."""
 import argparse
 import time
 
@@ -14,10 +18,15 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="write the typed event stream of every benchmark "
                          "run to PATH as JSONL")
+    ap.add_argument("--report", action="store_true",
+                    help="print the repro.obs bottleneck report after "
+                         "each benchmark run")
     args = ap.parse_args(argv)
     from benchmarks import _common
     if args.trace_out:
         _common.set_trace_out(args.trace_out)
+    if args.report:
+        _common.set_report(True)
     from benchmarks import (batch_scaling, capacity_trap, disagg_sweep,
                             dp_scaling, frontier, hybrid_sweep, kv_scaling,
                             latency_decoupling, model_scaling,

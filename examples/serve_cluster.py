@@ -10,11 +10,17 @@ timeline (replica joins/retires with timestamps). Fleets are built
 exclusively by ``Scenario.to_cluster()``; goodput uses the corrected
 accounting (fleet-makespan denominator, unfinished-as-miss).
 
-    PYTHONPATH=src python examples/serve_cluster.py
+The colocated/disagg pair also runs under a ``repro.obs`` tap (a pure
+event-stream subscriber — docs/obs.md): each fleet's summary line carries
+the bottleneck-regime attribution, and the full report is a
+``--report`` flag away.
+
+    PYTHONPATH=src python examples/serve_cluster.py [--report]
 """
 import dataclasses
 import sys
 
+from repro.obs import attach, regime_fractions, render_text
 from repro.scenario import get_scenario
 
 PAIR = ("ds8b-4xh200-colocated", "ds8b-4xh200-disagg")
@@ -55,18 +61,24 @@ def main():
     print(f"== {base.traffic.n_requests} long-context reasoning requests, "
           f"Poisson {base.traffic.rate:.0f} req/s, {base.model.name} on "
           f"{base.n_devices}xH200 (sim) ==")
+    want_report = "--report" in sys.argv[1:]
     for name in PAIR:
         sc = get_scenario(name)
         mode = "disaggregated" if sc.disaggregated else "colocated"
         rt = sc.to_cluster()
+        build = attach(rt.events)     # obs tap: subscriber, metrics untouched
         rt.submit_trace(trace)
         m = rt.run()
-        s = m.summary(slo)
+        rep = build()
+        s = m.summary(slo, regimes=regime_fractions(rep))
         print(f"\n[{mode}] finished={s['n_finished']}/{s['n_submitted']} "
               f"goodput={s['goodput_tok_s']:.0f}tok/s "
               f"(throughput={s['throughput_tok_s']:.0f}) "
-              f"slo_attainment={s['slo_attainment']:.2f}")
+              f"slo_attainment={s['slo_attainment']:.2f} "
+              f"regime={s['regimes']['dominant']}")
         show_fleet(s, m.request_summary())
+        if want_report:
+            print(render_text(rep, title=name))
     print("\nPast the capacity knee the colocated fleet queues arrivals "
           "behind saturated KV pools (TTFT blows the SLO); the disaggregated "
           "fleet keeps TTFT flat and holds more goodput (paper Obs 1/3/4).")

@@ -169,11 +169,16 @@ class ClusterMetrics:
 
     def summary(self, slo: Optional[Union[SLO, SLOMap]] = None,
                 slos: Optional[SLOMap] = None,
-                makespan: Optional[float] = None) -> Dict:
+                makespan: Optional[float] = None,
+                regimes: Optional[Dict] = None) -> Dict:
         """Fleet summary. Pass a single ``slo`` or a ``slos`` class map for
         SLO accounting (a map adds a per-class breakdown under
         ``"classes"``); ``makespan`` overrides the runtime-stamped fleet
-        clock."""
+        clock. ``regimes`` (the dict from
+        ``repro.obs.report.regime_fractions``) merges bottleneck-regime
+        fractions under a ``"regimes"`` key — obs stays a pure stream
+        consumer, so the attribution is computed there and *handed in*
+        here; omitted, the summary is byte-identical to pre-obs output."""
         finished = self.finished_requests()
         all_reqs = self.submitted or finished
         # served tokens include in-flight requests' partial decodes — the
@@ -234,6 +239,8 @@ class ClusterMetrics:
                 s["goodput_tok_s"] * dur / max(ws, 1e-9)
             if isinstance(table, Mapping):
                 out["classes"] = s["classes"]
+        if regimes is not None:
+            out["regimes"] = dict(regimes)
         return out
 
     def request_summary(self) -> Dict:

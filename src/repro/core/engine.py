@@ -260,6 +260,10 @@ class InferenceEngine:
         # --- telemetry + autotune
         self._steps += 1
         if self._steps % self.ecfg.snapshot_every == 0:
+            # the payload is the complete per-step telemetry surface: the
+            # repro.obs window folds must be computable from the stream
+            # alone (absolute page counts and the live concurrency cap, not
+            # just ratios — the cap can move under the autotuner)
             self.emitter.emit(
                 "step", running=len(self.sched.running),
                 waiting=len(self.sched.waiting),
@@ -268,7 +272,10 @@ class InferenceEngine:
                 gen_tokens=self._gen_total,
                 prefill_tokens=self._prefill_total,
                 preemptions=self.sched.n_preemptions,
-                hbm_busy=hbm_busy)
+                hbm_busy=hbm_busy,
+                kv_pages_used=self.alloc.used_pages,
+                kv_pages_free=self.alloc.free_pages,
+                max_seqs=self.sched.cfg.max_num_seqs)
         if self.ecfg.autotune:
             self.sched.cfg.max_num_seqs = self.autotuner.update(
                 kv_util=self.alloc.utilization(),

@@ -43,6 +43,15 @@ class Finding:
 SIM_PATHS = ("repro/core/", "repro/cluster/", "repro/scenario/",
              "repro/data/")
 
+# determinism scope = sim core + everything whose *output feeds* a sim run:
+# launch-side sweep/spec enumeration (a shuffled or entropy-seeded sweep
+# grid silently changes which scenarios a campaign runs) and the obs folds
+# (two same-seed traces must window/classify identically). Rules about
+# hidden nondeterminism (REP001 RNG, REP003 unordered iteration) apply
+# here; engine-internal invariants (REP006 time-float equality) stay
+# sim-scoped.
+DET_PATHS = SIM_PATHS + ("repro/launch/", "repro/obs/")
+
 
 class Rule(ast.NodeVisitor):
     """One lint rule: visit a module AST, emit ``Finding``s via ``report``.
@@ -98,7 +107,7 @@ class UnseededRNG(Rule):
     of one scenario disagree)."""
     rule_id = "REP001"
     title = "unseeded or global-state RNG in simulation code"
-    paths = SIM_PATHS
+    paths = DET_PATHS
 
     def visit_Call(self, node: ast.Call):
         name = _dotted(node.func)
@@ -162,7 +171,7 @@ class UnorderedIteration(Rule):
     a list alongside the membership set."""
     rule_id = "REP003"
     title = "iteration over an unordered collection in simulation code"
-    paths = SIM_PATHS
+    paths = DET_PATHS
 
     def _check_iter(self, node: ast.AST, it: ast.AST):
         # sorted(set(...)) / sorted({...}) / sum(set) are fine: sorted

@@ -16,7 +16,10 @@ from repro.scenario import SCENARIOS, Diagnostic, get_scenario, variant
 
 # findings are path-scoped for some rules: fixtures pretend to live in core
 SIM_PATH = "repro/core/fixture.py"
-OTHER_PATH = "repro/launch/fixture.py"
+# determinism scope (DET_PATHS) adds launch/ + obs/ on top of the sim core;
+# analysis/ stays outside every path-gated rule
+LAUNCH_PATH = "repro/launch/fixture.py"
+OTHER_PATH = "repro/analysis/fixture.py"
 
 
 def _ids(source, path=SIM_PATH):
@@ -35,13 +38,27 @@ def test_rep001_fires_on_global_and_unseeded_rng():
         assert "REP001" in _ids(src), src
 
 
-def test_rep001_clean_on_seeded_generator_and_outside_sim_paths():
+def test_rep001_clean_on_seeded_generator_and_outside_det_paths():
     clean = "import numpy as np\nrng = np.random.default_rng(42)\n" \
             "x = rng.normal(0, 1)\n"
     assert "REP001" not in _ids(clean)
-    # scope gate: launch scripts may use whatever RNG they like
+    # scope gate: analysis code may use whatever RNG it likes
     fires = "import numpy as np\nx = np.random.normal(0, 1)\n"
     assert "REP001" not in _ids(fires, path=OTHER_PATH)
+
+
+def test_determinism_scope_covers_launch_and_obs():
+    """The lint-PR follow-on: sweep enumeration (launch/) and trace folds
+    (obs/) must be as replay-deterministic as the sim core — REP001/REP003
+    now gate them. Engine-internal rules (REP006) stay sim-scoped."""
+    rng = "import numpy as np\nx = np.random.normal(0, 1)\n"
+    setiter = "for x in set(items):\n    pass\n"
+    timeq = "ok = t_end == horizon\n"
+    for path in (LAUNCH_PATH, "repro/obs/fixture.py"):
+        assert "REP001" in _ids(rng, path=path), path
+        assert "REP003" in _ids(setiter, path=path), path
+        assert "REP006" not in _ids(timeq, path=path), path
+    assert "REP006" in _ids(timeq)          # still fires in the sim core
 
 
 def test_rep002_fires_on_wall_clock_everywhere():
@@ -174,9 +191,9 @@ def test_rep009_clean_on_reads_and_consumer_modules():
     mut = "self.finished.append(ev.ref)\nself.metrics.on_event(ev)\n"
     assert "REP009" not in _ids(mut, path="repro/core/metrics.py")
     assert "REP009" not in _ids(mut, path="repro/cluster/metrics.py")
-    # and launch-side scripts are out of scope entirely
+    # and launch-side scripts are outside REP009's scope entirely
     assert "REP009" not in _ids("eng.metrics.finish(r, t=0)\n",
-                                path=OTHER_PATH)
+                                path=LAUNCH_PATH)
 
 
 # ------------------------------------------------------------- suppressions
