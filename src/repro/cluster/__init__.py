@@ -15,7 +15,12 @@ from repro.cluster.policies import (DispatchPolicy, JoinShortestQueue,
                                     LeastKVHeadroom, MemoryAware,
                                     MostKVHeadroom, RoundRobin, RoutingPolicy,
                                     make_dispatcher, make_policy)
+from repro.cluster.rebalance import (KVPressureRebalancer, RebalancePolicy,
+                                     make_rebalancer)
 from repro.cluster.runtime import ClusterConfig, ClusterRuntime
+from repro.cluster.view import (FleetView, NoFeasibleWorker, RebalanceDecision,
+                                RequestView, StragglerTracker, WorkerView,
+                                eligible_indices, fleet_snapshot, snapshot)
 from repro.cluster.worker import Worker, make_sim_worker
 
 __all__ = [
@@ -28,6 +33,10 @@ __all__ = [
     "RoutingPolicy", "RoundRobin", "JoinShortestQueue", "MemoryAware",
     "DispatchPolicy", "LeastKVHeadroom", "MostKVHeadroom",
     "make_policy", "make_dispatcher",
+    "RebalancePolicy", "KVPressureRebalancer", "make_rebalancer",
+    "WorkerView", "FleetView", "RequestView", "RebalanceDecision",
+    "NoFeasibleWorker", "StragglerTracker",
+    "snapshot", "fleet_snapshot", "eligible_indices",
     "ClusterConfig", "ClusterRuntime",
     "Worker", "make_sim_worker",
 ]

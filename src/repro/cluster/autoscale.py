@@ -38,10 +38,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional
+from typing import Callable, Dict, Optional, Sequence
 
 from repro.core.metrics import SLO
+from repro.cluster.view import FleetView, WorkerView
 from repro.cluster.worker import Worker
+from repro.obs.regimes import RegimeRules
 
 
 # ------------------------------------------------------------------- signals
@@ -59,6 +61,14 @@ class ScalingSignals:
     queue_depth: Optional[float] = None     # mean waiting requests / worker
     slo_attainment: Optional[float] = None  # attainment of recent finishes
     arrival_rate: Optional[float] = None    # est. arrivals/s into the fleet
+    # fraction of the pool that is Capacity-Bound by the repro.obs regime
+    # rules (preemption evidence this tick, or KV at/above
+    # ``RegimeRules.kv_saturated`` while requests queue). Preemptions are
+    # *events*, not levels: one worker's storm barely moves the pool-mean
+    # kv_util EWMA, but flips this fraction — the classifier's evidence,
+    # available to the controller a tick earlier than the KV mean crosses
+    # any ceiling
+    capacity_frac: Optional[float] = None
     # slow-EWMA rate baseline (alpha/8): the load the pool has demonstrably
     # been absorbing. fast/slow >> 1 is a surge — the LEADING scale-up
     # indicator (KV fill and queue growth lag a rate step by seconds, and
@@ -85,11 +95,13 @@ class ScalingSignals:
     def observe(self, *, kv_util: Optional[float] = None,
                 queue_depth: Optional[float] = None,
                 attainment: Optional[float] = None,
-                arrival_rate: Optional[float] = None):
+                arrival_rate: Optional[float] = None,
+                capacity_frac: Optional[float] = None):
         self.kv_util = self._blend(self.kv_util, kv_util)
         self.queue_depth = self._blend(self.queue_depth, queue_depth)
         self.slo_attainment = self._blend(self.slo_attainment, attainment)
         self.arrival_rate = self._blend(self.arrival_rate, arrival_rate)
+        self.capacity_frac = self._blend(self.capacity_frac, capacity_frac)
         if arrival_rate is not None and self.n_obs < self.warmup_ticks:
             # arithmetic mean while warming up: an EWMA would anchor on the
             # first (noisy) observation for ~1/alpha_slow ticks, and a biased
@@ -184,6 +196,14 @@ class SLOGuard(AutoscalePolicy):
     surge_ratio: float = 1.5
     surge_hold: int = 2           # consecutive surging ticks before acting
                                   # (one Poisson spike is noise, two are load)
+    # opt-in Capacity-Bound trigger: scale up when the EWMA fraction of the
+    # pool classified Capacity-Bound (``ScalingSignals.capacity_frac`` — the
+    # repro.obs regime evidence: preemptions, or saturated KV while queued)
+    # exceeds this. Fires a tick earlier than the pool-mean KV EWMA on a
+    # surge: one replica's preemption storm flips its regime bit immediately
+    # while the fleet KV mean is still averaging it away. ``None`` disables
+    # (bit-identical to the pre-regime controller).
+    capacity_frac_ceiling: Optional[float] = None
     _surge_run: int = dataclasses.field(default=0, init=False, repr=False)
 
     def desired_delta(self, s: ScalingSignals, n_provisioned: int) -> int:
@@ -201,7 +221,10 @@ class SLOGuard(AutoscalePolicy):
         hurt = att is not None and att < self.attain_floor
         saturating = u is not None and u > self.util_ceiling
         backlogged = q is not None and q > self.up_queue_depth
-        if hurt or saturating or backlogged:
+        pressured = self.capacity_frac_ceiling is not None \
+            and s.capacity_frac is not None \
+            and s.capacity_frac > self.capacity_frac_ceiling
+        if hurt or saturating or backlogged or pressured:
             # attainment already collapsing = the controller is late:
             # take two steps, cold starts are serial lag otherwise
             return 2 if (hurt and saturating) or backlogged else 1
@@ -258,43 +281,60 @@ class AutoscaleController:
         self.slo = slo
         self.cold_start_extra_s = cold_start_extra_s
         self.signals = ScalingSignals(ewma_alpha=ewma_alpha)
+        self.regime_rules = RegimeRules()
         self.next_tick: Optional[float] = tick_s
         self._last_tick_t = 0.0
         self._last_action_t: Optional[float] = None
+        self._last_preempt: Dict[str, int] = {}
         self.n_scale_ups = 0
         self.n_scale_downs = 0
 
     # ----------------------------------------------------------- observation
-    def _observe(self, rt, t: float, pool: List[Worker]):
+    def _capacity_bound(self, v: WorkerView) -> bool:
+        """The repro.obs Capacity-Bound evidence, on view fields: the worker
+        preempted since the last tick (storm), or its KV pool sits at/above
+        the saturation threshold while requests queue behind it
+        (KV-throttled admission)."""
+        preempted = v.preemptions - self._last_preempt.get(v.name, 0) > 0
+        throttled = v.kv_util >= self.regime_rules.kv_saturated \
+            and v.n_waiting > 0
+        return preempted or throttled
+
+    def _observe(self, fleet: FleetView, t: float,
+                 pool: Sequence[WorkerView]):
         dt = max(t - self._last_tick_t, 1e-9)
-        kv = sum(w.kv_util() for w in pool) / len(pool) if pool else None
-        queue = sum(len(w.engine.sched.waiting) for w in pool) / len(pool) \
-            if pool else None
-        # arrivals in (last_tick, t]: routed requests carry .arrival, the
-        # not-yet-routed remainder sits in the runtime's arrival heap —
+        kv = sum(v.kv_util for v in pool) / len(pool) if pool else None
+        queue = sum(v.n_waiting for v in pool) / len(pool) if pool else None
+        cap = sum(1 for v in pool
+                  if self._capacity_bound(v)) / len(pool) if pool else None
+        for v in pool:
+            self._last_preempt[v.name] = v.preemptions
+        # arrivals in (last_tick, t]: the view's arrival series covers routed
+        # requests AND the not-yet-routed remainder in the runtime's heap —
         # disjoint sets, so each arrival is counted in exactly one window
-        arrived = sum(1 for r in rt.submitted
-                      if self._last_tick_t < r.arrival <= t)
-        arrived += sum(1 for (ta, _, _) in rt._arrivals
-                       if self._last_tick_t < ta <= t)
+        arrived = sum(1 for ta in fleet.arrivals
+                      if self._last_tick_t < ta <= t)
         att = None
         if self.slo is not None:
-            fin = [r for w in rt.workers for r in w.engine.metrics.finished
+            fin = [r for r in fleet.finished
                    if r.t_finished is not None
                    and self._last_tick_t < r.t_finished <= t]
             if fin:
                 att = sum(self.slo.attained(r) for r in fin) / len(fin)
         self.signals.observe(kv_util=kv, queue_depth=queue, attainment=att,
-                             arrival_rate=arrived / dt)
+                             arrival_rate=arrived / dt, capacity_frac=cap)
 
     # -------------------------------------------------------------- actuation
     def tick(self, rt, t: float):
         """One controller period: observe -> decide -> clamp -> actuate.
         Called by the runtime's event loop with the fleet quiescent at
-        virtual time ``t``; always schedules the next tick."""
-        pool = rt.active_pool(self.role)
-        warming = rt.warming_count(self.role)
-        self._observe(rt, t, pool)
+        virtual time ``t``; always schedules the next tick. Observation is
+        one frozen ``FleetView`` — the same decision plane routing, dispatch
+        and rebalancing read."""
+        fleet = rt.fleet_view(t)
+        pool = fleet.pool(self.role)
+        warming = fleet.warming_count(self.role)
+        self._observe(fleet, t, pool)
         n = len(pool) + warming
         delta = self.policy.desired_delta(self.signals, n)
         if warming and delta < 0:
@@ -337,7 +377,9 @@ def make_autoscaler(spec, worker_factory: Callable[[], Worker],
         policy = SLOGuard(attain_floor=spec.attain_floor,
                           util_ceiling=spec.util_ceiling,
                           scale_down_util=spec.scale_down_util,
-                          surge_ratio=spec.surge_ratio)
+                          surge_ratio=spec.surge_ratio,
+                          capacity_frac_ceiling=getattr(
+                              spec, "capacity_frac_ceiling", None))
     else:
         raise ValueError(f"unknown autoscale policy {spec.policy!r} "
                          f"(have {sorted(POLICIES)})")

@@ -1,50 +1,32 @@
-"""Pluggable cluster scheduling policies.
+"""Pluggable cluster scheduling policies, scored on the decision plane.
 
 ``RoutingPolicy``   — picks a worker for a *new* request (colocated fleets and
                       the prefill pool of a disaggregated fleet).
 ``DispatchPolicy``  — picks a decode worker for a *migrated* prefill-complete
                       request in a disaggregated fleet.
 
+Policies consume frozen :class:`~repro.cluster.view.WorkerView` snapshots,
+never live workers: all KV headroom / occupancy / feasibility math lives in
+``repro.cluster.view`` (lint rule REP010 rejects ``engine``/``alloc``/
+``sched`` access here), so routing, dispatch, admission and autoscaling
+reason from one consistent observation instead of six ad-hoc re-derivations.
+
 The memory-aware policy is the paper's Obs 3/4 recommendation ("DP should be
 combined with ... memory-aware routing"; "tail latency is dominated by the
 replica that reaches KV saturation first"): score replicas by predicted KV
 headroom with a straggler penalty folded into one scalar — a replica whose
 EWMA step latency runs above the fleet mean is charged a headroom-fraction
-equivalent, so slowness and saturation trade off in the same unit.
+equivalent, so slowness and saturation trade off in the same unit. The
+straggler EWMA itself is runtime-owned (``StragglerTracker``) and arrives on
+the view as ``step_ewma``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional
 
 from repro.core.request import Request
-from repro.cluster.worker import Worker
-
-
-def pool_capacity_tokens(w: Worker) -> int:
-    return w.engine.alloc.n_pages * w.engine.alloc.page_size
-
-
-def fits_worker(w: Worker, prompt_len: int, max_new: int) -> bool:
-    """Hard KV-capacity feasibility: a prefill-only worker needs just the
-    prompt (+first token) to fit; everyone else needs the full context."""
-    prefill_only = w.engine.sched.cfg.prefill_only
-    need = prompt_len + (1 if prefill_only else max_new) + 1
-    return need <= pool_capacity_tokens(w)
-
-
-def eligible_indices(workers: List[Worker], prompt_len: int,
-                     max_new: int) -> List[int]:
-    """Workers that can hold the request at all — policies must not route to
-    a worker whose pool is structurally too small (heterogeneous fleets), or
-    the engine's fits-alone invariant breaks mid-run."""
-    idx = [i for i, w in enumerate(workers)
-           if fits_worker(w, prompt_len, max_new)]
-    if not idx:
-        raise ValueError(
-            f"no worker can hold a ({prompt_len} in, {max_new} out) request"
-            f" (pool capacities: {[pool_capacity_tokens(w) for w in workers]})")
-    return idx
+from repro.cluster.view import WorkerView, eligible_indices
 
 
 class RoutingPolicy:
@@ -53,27 +35,20 @@ class RoutingPolicy:
     class-aware policies may weigh latency risk more heavily for urgent
     requests; class-blind policies ignore it."""
 
-    def pick(self, workers: List[Worker], prompt_len: int,
+    def pick(self, views: List[WorkerView], prompt_len: int,
              max_new: int, urgency: float = 0.0) -> int:
         raise NotImplementedError
-
-    def note_step(self, name: str, dt: float):
-        """Observe one engine iteration of the named worker (straggler
-        tracking). Keyed by worker *name*, not pool index — autoscaling
-        mutates the pool, and an index-keyed EWMA would silently transfer a
-        retired worker's latency history to whichever replica inherited its
-        slot."""
 
 
 class RoundRobin(RoutingPolicy):
     def __init__(self):
         self._rr = -1
 
-    def pick(self, workers: List[Worker], prompt_len: int,
+    def pick(self, views: List[WorkerView], prompt_len: int,
              max_new: int, urgency: float = 0.0) -> int:
-        ok = set(eligible_indices(workers, prompt_len, max_new))
-        for step in range(1, len(workers) + 1):
-            i = (self._rr + step) % len(workers)
+        ok = set(eligible_indices(views, prompt_len, max_new))
+        for step in range(1, len(views) + 1):
+            i = (self._rr + step) % len(views)
             if i in ok:
                 self._rr = i
                 return i
@@ -81,10 +56,28 @@ class RoundRobin(RoutingPolicy):
 
 
 class JoinShortestQueue(RoutingPolicy):
-    def pick(self, workers: List[Worker], prompt_len: int,
+    def pick(self, views: List[WorkerView], prompt_len: int,
              max_new: int, urgency: float = 0.0) -> int:
-        return min(eligible_indices(workers, prompt_len, max_new),
-                   key=lambda i: workers[i].queue_depth)
+        return min(eligible_indices(views, prompt_len, max_new),
+                   key=lambda i: views[i].queue_depth)
+
+
+def relative_straggle(v: WorkerView,
+                      pool: List[WorkerView]) -> float:
+    """Relative EWMA step latency of ``v`` among the *observed* members of
+    ``pool`` (its own view included): EWMA / pool-observed-mean - 1. Workers
+    never observed carry no data, take no penalty and no reward, and do not
+    drag the reference mean — the PR-3 warmup-bias fix, now expressed on
+    view fields."""
+    if v.step_ewma is None:
+        return 0.0
+    observed = [u.step_ewma for u in pool if u.step_ewma is not None]
+    if not observed:
+        return 0.0
+    mean = sum(observed) / len(observed)
+    if mean <= 0:
+        return 0.0
+    return v.step_ewma / mean - 1.0
 
 
 @dataclasses.dataclass
@@ -93,66 +86,26 @@ class MemoryAware(RoutingPolicy):
                + urgency_weight * urgency * queue_frac_i.
 
     All terms are dimensionless: headroom as a fraction of the page pool,
-    straggle as relative EWMA step latency among *observed* workers, queue
-    pressure as occupancy of the concurrency cap. The urgency term makes the
-    router latency-averse for interactive requests (a deep queue is TTFT
-    risk) while batch requests still pack by headroom.
-
-    Straggler state is keyed by worker NAME so it survives pool mutation
-    (autoscaled fleets add and retire replicas mid-run; an index-keyed list
-    would hand a retiree's history to its slot's inheritor). Only observed
-    workers carry data: unobserved workers take no penalty and no reward,
-    and the fleet mean is computed over the *current pool's* observed
-    members — a long-retired straggler must not drag the reference mean."""
+    straggle as relative EWMA step latency among *observed* workers
+    (``relative_straggle``), queue pressure as occupancy of the concurrency
+    cap. The urgency term makes the router latency-averse for interactive
+    requests (a deep queue is TTFT risk) while batch requests still pack by
+    headroom."""
     straggler_penalty: float = 2.0
-    ewma_alpha: float = 0.2
     urgency_weight: float = 1.0
 
-    def __post_init__(self):
-        self._lat_ewma: Dict[str, float] = {}
-
-    def note_step(self, name: str, dt: float):
-        prev = self._lat_ewma.get(name)
-        a = self.ewma_alpha
-        # first observation seeds the EWMA (no bias toward zero at warmup)
-        self._lat_ewma[name] = dt if prev is None else (1 - a) * prev + a * dt
-
-    def forget(self, name: str):
-        """Drop a retired worker's history (a future replica reusing the
-        name must not inherit a dead worker's straggle)."""
-        self._lat_ewma.pop(name, None)
-
-    def _straggle(self, name: str,
-                  pool: Optional[Sequence[str]] = None) -> float:
-        """Relative EWMA step latency of ``name`` among the observed members
-        of ``pool`` (default: every observed worker)."""
-        if name not in self._lat_ewma:
-            return 0.0                   # unobserved: no data, no penalty
-        names = list(pool) if pool is not None else list(self._lat_ewma)
-        observed = [self._lat_ewma[n] for n in names if n in self._lat_ewma]
-        if not observed:
-            return 0.0
-        mean = sum(observed) / len(observed)
-        if mean <= 0:
-            return 0.0
-        return self._lat_ewma[name] / mean - 1.0
-
-    def pick(self, workers: List[Worker], prompt_len: int,
+    def pick(self, views: List[WorkerView], prompt_len: int,
              max_new: int, urgency: float = 0.0) -> int:
-        pool_names = [w.name for w in workers]
-
         def score(i):
-            w = workers[i]
-            head = w.predicted_headroom_pages() \
-                - w.predicted_candidate_pages(prompt_len, max_new)
-            frac = head / max(w.engine.alloc.n_pages, 1)
-            queue_frac = w.queue_depth / max(w.engine.sched.cfg.max_num_seqs,
-                                             1)
+            v = views[i]
+            head = v.predicted_headroom_pages() \
+                - v.candidate_pages(prompt_len, max_new)
+            frac = head / max(v.n_pages, 1)
+            queue_frac = v.queue_depth / max(v.max_seqs, 1)
             return (-frac
-                    + self.straggler_penalty * self._straggle(w.name,
-                                                              pool_names)
+                    + self.straggler_penalty * relative_straggle(v, views)
                     + self.urgency_weight * urgency * queue_frac)
-        return min(eligible_indices(workers, prompt_len, max_new), key=score)
+        return min(eligible_indices(views, prompt_len, max_new), key=score)
 
 
 def make_policy(name: str, **kw) -> RoutingPolicy:
@@ -169,7 +122,7 @@ class DispatchPolicy:
     """Chooses the decode worker that adopts a migrated request. ``urgency``
     is the request's normalised SLO-class urgency (see RoutingPolicy)."""
 
-    def pick(self, workers: List[Worker], req: Request,
+    def pick(self, views: List[WorkerView], req: Request,
              urgency: float = 0.0) -> Optional[int]:
         raise NotImplementedError
 
@@ -184,36 +137,36 @@ class LeastKVHeadroom(DispatchPolicy):
     short decodes never stress the capacity wall best-fit protects. Falls
     back to the most-headroom worker when none fits."""
 
-    def pick(self, workers: List[Worker], req: Request,
+    def pick(self, views: List[WorkerView], req: Request,
              urgency: float = 0.0) -> Optional[int]:
-        if not workers:
+        if not views:
             return None
-        need = [None] * len(workers)
+        need = [None] * len(views)
         fits = []
-        for i, w in enumerate(workers):
+        for i, v in enumerate(views):
             remaining = req.max_new_tokens - req.generated
-            pages = w.engine.alloc.pages_for(req.context_len + remaining + 1)
-            head = w.predicted_headroom_pages()
+            pages = v.pages_for(req.context_len + remaining + 1)
+            head = v.predicted_headroom_pages()
             need[i] = head
             if head >= pages:
                 fits.append(i)
         if fits:
             if urgency > 0.5:
-                return min(fits, key=lambda i: (workers[i].queue_depth,
+                return min(fits, key=lambda i: (views[i].queue_depth,
                                                 need[i]))
             return min(fits, key=lambda i: need[i])
-        return max(range(len(workers)), key=lambda i: need[i])
+        return max(range(len(views)), key=lambda i: need[i])
 
 
 class MostKVHeadroom(DispatchPolicy):
     """Worst-fit (load-levelling) decode dispatch: always the emptiest."""
 
-    def pick(self, workers: List[Worker], req: Request,
+    def pick(self, views: List[WorkerView], req: Request,
              urgency: float = 0.0) -> Optional[int]:
-        if not workers:
+        if not views:
             return None
-        return max(range(len(workers)),
-                   key=lambda i: workers[i].predicted_headroom_pages())
+        return max(range(len(views)),
+                   key=lambda i: views[i].predicted_headroom_pages())
 
 
 def make_dispatcher(name: str) -> DispatchPolicy:

@@ -45,6 +45,9 @@ from repro.cluster.arrivals import TraceEntry
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.policies import (DispatchPolicy, RoutingPolicy,
                                     make_dispatcher, make_policy)
+from repro.cluster.rebalance import RebalancePolicy, make_rebalancer
+from repro.cluster.view import (FleetView, NoFeasibleWorker, StragglerTracker,
+                                fleet_snapshot, snapshot)
 from repro.cluster.worker import Worker
 from repro.trace.events import EventEmitter, EventLog
 
@@ -58,6 +61,13 @@ class ClusterConfig:
     # multi-tenant SLO classes: name -> urgency, consulted by routing and
     # dispatch (per-worker scheduling urgency lives in each EngineConfig)
     class_priorities: Dict[str, int] = dataclasses.field(default_factory=dict)
+    name: str = ""                    # scenario name, surfaced in errors
+    straggler_alpha: float = 0.2      # EWMA half-life of the straggler tracker
+    # decode→decode rebalancing: a RebalancePolicy instance, a registry name
+    # ("kv_pressure"), or None (disabled — the event loop is then
+    # bit-identical to a fleet without the hook)
+    rebalance: Union[None, str, RebalancePolicy] = None
+    rebalance_every_s: float = 0.05   # how often the event loop consults it
 
 
 class ClusterRuntime:
@@ -81,6 +91,13 @@ class ClusterRuntime:
         self.dispatcher = self.cfg.dispatcher \
             if isinstance(self.cfg.dispatcher, DispatchPolicy) \
             else make_dispatcher(self.cfg.dispatcher)
+        # runtime-owned observation state: policies get it on the view
+        self.straggler = StragglerTracker(alpha=self.cfg.straggler_alpha)
+        self.rebalancer = self.cfg.rebalance \
+            if isinstance(self.cfg.rebalance, RebalancePolicy) \
+            else (make_rebalancer(self.cfg.rebalance)
+                  if self.cfg.rebalance is not None else None)
+        self._next_rebalance_check = float("-inf")
 
         self.prefill_pool = [w for w in self.workers if w.role == "prefill"]
         self.decode_pool = [w for w in self.workers if w.role == "decode"]
@@ -143,18 +160,17 @@ class ClusterRuntime:
 
     def submit(self, isl: int, osl: int, arrival: float = 0.0,
                slo_class: str = ""):
-        from repro.cluster.policies import pool_capacity_tokens
         if self.disaggregated:
-            cap = max(pool_capacity_tokens(w) for w in self.decode_pool)
+            cap = max(w.kv_view().capacity_tokens for w in self.decode_pool)
             if isl + osl + 1 > cap:
                 raise ValueError(f"request ({isl} in, {osl} out) exceeds "
                                  f"largest decode-pool KV capacity {cap}")
-            pcap = max(pool_capacity_tokens(w) for w in self.prefill_pool)
+            pcap = max(w.kv_view().capacity_tokens for w in self.prefill_pool)
             if isl + 2 > pcap:
                 raise ValueError(f"request prompt ({isl} tokens) exceeds "
                                  f"largest prefill-pool KV capacity {pcap}")
         else:
-            cap = max(pool_capacity_tokens(w) for w in self.route_pool)
+            cap = max(w.kv_view().capacity_tokens for w in self.route_pool)
             if isl + osl + 1 > cap:
                 raise ValueError(f"request ({isl} in, {osl} out) exceeds "
                                  f"largest worker KV capacity {cap}")
@@ -165,6 +181,13 @@ class ClusterRuntime:
     def submit_trace(self, trace: Sequence[TraceEntry]):
         for e in trace:
             self.submit(e.isl, e.osl, e.arrival, slo_class=e.slo_class)
+
+    # ---------------------------------------------------------- decision plane
+    def fleet_view(self, t: Optional[float] = None, *,
+                   series: bool = True) -> FleetView:
+        """One frozen, read-only observation of the whole fleet — what the
+        autoscaler and the rebalancer decide on (``repro.cluster.view``)."""
+        return fleet_snapshot(self, t=t, series=series)
 
     # ------------------------------------------------------------- elasticity
     def _role_pool(self, role: str) -> List[Worker]:
@@ -226,7 +249,10 @@ class ClusterRuntime:
             pool = self._role_pool(role)
             if not pool:
                 raise ValueError(f"no active {role!r} workers to retire")
-            worker = min(pool, key=lambda w: (w.queue_depth, w.kv_util()))
+            vs = [snapshot(w) for w in pool]
+            worker = pool[min(range(len(pool)),
+                              key=lambda i: (vs[i].queue_depth,
+                                             vs[i].kv_util))]
         pool = self._role_pool(worker.role)
         if worker not in pool:
             raise ValueError(f"worker {worker.name!r} is not in the active "
@@ -255,9 +281,8 @@ class ClusterRuntime:
             if w.draining and w.t_retire is None and not w.engine.has_work:
                 w.t_retire = max(w.engine.now,
                                  self._retire_requested.get(w.name, 0.0))
-                forget = getattr(self.policy, "forget", None)
-                if forget is not None:
-                    forget(w.name)     # a reused name must not inherit this
+                # a reused name must not inherit the retiree's straggle EWMA
+                self.straggler.forget(w.name)
                 self.emitter.emit(
                     "drained", t=w.t_retire, worker=w.name, ref=w,
                     role=w.role, pool_size=len(self._role_pool(w.role)))
@@ -306,17 +331,19 @@ class ClusterRuntime:
                 self._autoscale_ticks()
             self._deliver_migrations()
             self._route_arrivals()
+            if self.rebalancer is not None:
+                self._tick_rebalance()
             w = self._next_worker()
             if w is None:
                 if self._migrating:
-                    # decode pool saturated and idle: let the retry clock of
+                    # adopter pool saturated and idle: let the retry clock of
                     # the earliest transfer pull the fleet forward — unless
                     # an unrouted arrival is the earlier fleet event (the
                     # work it spawns may land on these idle workers first)
                     t = min(m["ready"] for m in self._migrating)
                     if self._arrivals and self._arrivals[0][0] < t:
                         continue                 # routing releases it next
-                    for dw in self.decode_pool:
+                    for dw in self._adopter_pool():
                         if not dw.engine.sched.has_work:
                             dw.engine.advance_to(t)
                     self._deliver_migrations()
@@ -332,7 +359,7 @@ class ClusterRuntime:
             t0 = w.engine.now
             w.engine.step()
             if w in self.route_pool:
-                self.policy.note_step(w.name, w.engine.now - t0)
+                self.straggler.note_step(w.name, w.engine.now - t0)
             if w.role == "prefill":
                 self._harvest_prefill_complete(w)
             if w.draining:
@@ -380,9 +407,18 @@ class ClusterRuntime:
                 # replicas whose cold start completed by this arrival are
                 # routable for it
                 self._activate_warming(entry.arrival)
-            i = self.policy.pick(
-                self.route_pool, entry.isl, entry.osl,
-                urgency=self._classes.normalized_urgency(entry.slo_class))
+            # a fresh view per route decision: the previous route's admission
+            # and KV growth must be visible to this one (live-read semantics)
+            views = [snapshot(w, straggler=self.straggler)
+                     for w in self.route_pool]
+            try:
+                i = self.policy.pick(
+                    views, entry.isl, entry.osl,
+                    urgency=self._classes.normalized_urgency(entry.slo_class))
+            except NoFeasibleWorker as e:
+                raise e.with_context(scenario=self.cfg.name,
+                                     arrival=entry.arrival,
+                                     slo_class=entry.slo_class) from None
             # the engine's "arrival" event (forwarded into the fleet log)
             # lands the request in self.submitted via ClusterMetrics
             self.route_pool[i].engine.submit(
@@ -430,22 +466,29 @@ class ClusterRuntime:
                      + ([self._arrivals[0][0]] if self._arrivals else []),
                      default=float("inf"))
             remaining = req.max_new_tokens - req.generated
-
-            def can_hold(dw):
-                return req.context_len + remaining + 1 \
-                    <= dw.engine.alloc.n_pages * dw.engine.alloc.page_size
-
-            eligible = [dw for dw in self.decode_pool if can_hold(dw)
-                        and (dw.engine.now >= ready
-                             or (ready <= hz
-                                 and not dw.engine.sched.has_work))]
+            # rebalance transfers are pinned to the destination the policy
+            # chose; if it retired while the KV was in flight, fall back to
+            # any peer but the (pressured) source
+            cands = self._adopter_pool()
+            pin = m.get("dst")
+            if pin is not None:
+                pinned = [dw for dw in cands if dw.name == pin]
+                if not pinned:
+                    pinned = [dw for dw in cands if dw.name != m["src"]]
+                cands = pinned or cands
+            views = [snapshot(dw, straggler=self.straggler) for dw in cands]
+            eligible = [i for i, v in enumerate(views)
+                        if req.context_len + remaining + 1
+                        <= v.capacity_tokens
+                        and (v.now >= ready
+                             or (ready <= hz and not v.sched_has_work))]
             urgency = self._classes.normalized_urgency(req.slo_class)
-            i = self.dispatcher.pick(eligible, req, urgency=urgency) \
-                if eligible else None
-            if i is None:
+            j = self.dispatcher.pick([views[i] for i in eligible], req,
+                                     urgency=urgency) if eligible else None
+            if j is None:
                 still.append(m)
                 continue
-            target = eligible[i]
+            target = cands[eligible[j]]
             target.engine.advance_to(ready)
             if not target.engine.inject(req):
                 still.append(m)        # no KV/seq room yet: retry next tick
@@ -454,3 +497,53 @@ class ClusterRuntime:
             # log) paired with the pending "kv_transfer" closes the
             # MigrationRecord in ClusterMetrics — no separate note here
         self._migrating = still
+
+    def _adopter_pool(self) -> List[Worker]:
+        """Who can adopt an in-flight migration: the decode pool, or — for
+        decode→decode rebalancing on a colocated fleet — the colocated pool
+        (disaggregated fleets always have a decode pool)."""
+        return self.decode_pool if self.decode_pool else self.colocated_pool
+
+    # ------------------------------------------------------------- rebalancing
+    def _tick_rebalance(self):
+        """Consult the rebalance policy on a fresh fleet view, rate-limited
+        to ``cfg.rebalance_every_s`` of virtual time (the policy itself
+        additionally enforces its decision cooldown)."""
+        t = self.makespan
+        if t < self._next_rebalance_check:
+            return
+        self._next_rebalance_check = t + self.cfg.rebalance_every_s
+        decision = self.rebalancer.decide(self.fleet_view(t, series=False))
+        if decision is not None:
+            self._apply_rebalance(decision)
+
+    def _apply_rebalance(self, d):
+        """Actuate one RebalanceDecision: emit the ``rebalance`` event, eject
+        the victim from the source, pay the modeled KV transfer, and enqueue
+        a destination-pinned migration. Decisions are made on a frozen view;
+        any that no longer match live state (victim finished, was preempted,
+        or moved) are dropped — deciding is cheap, acting on stale state is
+        not."""
+        by_name = {w.name: w for w in self.workers}
+        src, dst = by_name.get(d.src), by_name.get(d.dst)
+        if src is None or dst is None or dst.draining:
+            return
+        req = next((r for r in src.engine.sched.running
+                    if r.rid == d.rid), None)
+        if req is None or not req.prefill_done or req.generated < 1:
+            return
+        t = src.engine.now
+        self.emitter.emit("rebalance", rid=req.rid, ref=req, t=t,
+                          worker=d.src, src=d.src, dst=d.dst,
+                          kv_util=d.kv_util, reason=d.reason)
+        src.engine.eject(req)
+        hw = src.engine.runner.hw
+        tt = pm.kv_transfer_time(src.engine.cfg_model, req.context_len, hw,
+                                 self.cfg.transfer_dtype_bytes)
+        self._migrating.append({
+            "req": req, "src": d.src, "eject": t, "ready": t + tt,
+            "dst": d.dst, "rebalance": True,
+        })
+        self.emitter.emit("kv_transfer", rid=req.rid, ref=req, t=t,
+                          worker=d.src, ready=t + tt,
+                          context_tokens=req.context_len)

@@ -8,9 +8,11 @@ Roles (paper §III phase divergence / disaggregated serving):
   decode    — receives migrated prefill-complete requests and decodes them
               to completion; never executes prefill.
 
-Workers expose the KV-headroom prediction the routing policies score with —
-the same predicted-peak estimate KV-aware admission uses (Obs 1/8), so the
-router and the admission controller agree about saturation.
+Workers are state holders: the KV-headroom predictions the routing policies
+score with live on the decision plane (``repro.cluster.view.WorkerView`` —
+the same predicted-peak estimate KV-aware admission uses, Obs 1/8, so the
+router and the admission controller agree about saturation); a worker only
+exposes the raw accessors the view builder snapshots from.
 """
 from __future__ import annotations
 
@@ -21,7 +23,7 @@ from typing import Dict, Optional
 from repro.configs.base import ModelConfig
 from repro.core import perf_model as pm
 from repro.core.engine import EngineConfig, InferenceEngine
-from repro.core.request import Request
+from repro.core.kv_cache import KVView
 from repro.core.runner import SimRunner
 
 ROLES = ("colocated", "prefill", "decode")
@@ -84,43 +86,12 @@ class Worker:
     def kv_util(self) -> float:
         return self.engine.alloc.utilization()
 
-    def predicted_used_pages(self, req: Optional[Request] = None,
-                             extra_tokens: int = 0) -> float:
-        """Predicted peak page demand of everything queued/running (plus an
-        optional candidate request), using the admission estimator's OSL
-        prediction. Decode growth is not predicted for prefill-role workers —
-        requests leave them after the first token."""
-        e = self.engine
-        est = e.sched.admission.estimator.predict
-        grow = self.role != "prefill"
-
-        def peak(r: Request) -> int:
-            future = max(est(r), r.generated) if grow else r.generated
-            return e.alloc.pages_for(r.isl + int(future) + 1)
-
-        pred = sum(peak(r) for r in e.sched.running)
-        pred += sum(peak(r) for r in e.sched.waiting)
-        if req is not None:
-            pred += peak(req)
-        if extra_tokens:
-            pred += e.alloc.pages_for(extra_tokens)
-        return pred
-
-    def predicted_headroom_pages(self, req: Optional[Request] = None,
-                                 extra_tokens: int = 0) -> float:
-        return self.engine.alloc.n_pages - self.predicted_used_pages(
-            req, extra_tokens)
-
-    def predicted_candidate_pages(self, prompt_len: int, max_new: int) -> int:
-        """Role-aware page demand of a prospective request: prefill workers
-        hold only the prompt (+first token); others grow by the predicted
-        OSL — the same accounting `predicted_used_pages` applies to what's
-        already queued."""
-        future = 0
-        if self.role != "prefill":
-            est = self.engine.sched.admission.estimator
-            future = int(est.predict_tokens(max_new))
-        return self.engine.alloc.pages_for(prompt_len + future + 1)
+    def kv_view(self) -> KVView:
+        """Frozen KV occupancy/capacity snapshot — what the runtime's
+        structural capacity checks read instead of allocator internals. The
+        full decision-plane snapshot (predicted headroom, queue composition,
+        straggler EWMA) is ``repro.cluster.view.snapshot(worker)``."""
+        return KVView.of(self.engine.alloc)
 
 
 def default_admission(role: str) -> str:

@@ -88,6 +88,39 @@ class PagedAllocator:
         self.__post_init__()
 
 
+@dataclasses.dataclass(frozen=True)
+class KVView:
+    """Frozen, read-only snapshot of a :class:`PagedAllocator` — the KV leg
+    of the decision plane (see ``repro.cluster.view``).
+
+    Carries exactly what capacity/headroom decisions need (pool size, page
+    geometry, current occupancy) and the pure ``pages_for`` arithmetic, so
+    admission budgets, routing feasibility and rebalancing all compute
+    headroom from one snapshot instead of scraping allocator internals.
+    Duck-type-compatible with the allocator for ``AdmissionPolicy.admit``
+    (which reads only ``n_pages`` / ``free_pages`` / ``pages_for``)."""
+    n_pages: int
+    page_size: int
+    used_pages: int
+    free_pages: int
+
+    @classmethod
+    def of(cls, alloc: "PagedAllocator") -> "KVView":
+        return cls(n_pages=alloc.n_pages, page_size=alloc.page_size,
+                   used_pages=alloc.used_pages, free_pages=alloc.free_pages)
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Structural pool capacity: every page filled to the brim."""
+        return self.n_pages * self.page_size
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def utilization(self) -> float:
+        return self.used_pages / self.n_pages if self.n_pages else 0.0
+
+
 def kv_pages_needed(cfg, tokens: int, page_size: int = 16) -> int:
     """Pages needed for `tokens` of context (token-granular; all layers share
     a page table as in vLLM's per-layer parallel allocation)."""

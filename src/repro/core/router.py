@@ -31,27 +31,33 @@ class DPRouter:
     def __init__(self, replicas: List[InferenceEngine],
                  cfg: Optional[RouterConfig] = None):
         # deferred upward import: policies live with the cluster layer (they
-        # score Workers); core stays importable standalone and the cycle
+        # score WorkerViews); core stays importable standalone and the cycle
         # (cluster.worker -> core.engine) is avoided. Keep cluster imports
         # out of core module scope.
         from repro.cluster.policies import RoutingPolicy, make_policy
+        from repro.cluster.view import StragglerTracker, snapshot
         from repro.cluster.worker import Worker
         self.replicas = replicas
         self.cfg = cfg or RouterConfig()
         self.workers = [Worker(engine=e, role="colocated", name=f"dp{i}")
                         for i, e in enumerate(replicas)]
+        # per-replica step-latency EWMA, router-owned: policies read it from
+        # the WorkerView snapshots built per pick (the decision plane)
+        self.straggler = StragglerTracker(alpha=self.cfg.ewma_alpha)
+        self._snapshot = snapshot
         if self.cfg.policy == "memory_aware":
             self.policy: RoutingPolicy = make_policy(
-                "memory_aware", straggler_penalty=self.cfg.straggler_penalty,
-                ewma_alpha=self.cfg.ewma_alpha)
+                "memory_aware", straggler_penalty=self.cfg.straggler_penalty)
         else:
             self.policy = make_policy(self.cfg.policy)
 
     def note_step(self, i: int, dt: float):
-        self.policy.note_step(i, dt)
+        self.straggler.note_step(self.workers[i].name, dt)
 
     def pick(self, prompt_len: int, max_new: int) -> int:
-        return self.policy.pick(self.workers, prompt_len, max_new)
+        views = [self._snapshot(w, straggler=self.straggler)
+                 for w in self.workers]
+        return self.policy.pick(views, prompt_len, max_new)
 
     def submit(self, prompt, max_new: int, arrival: float = None) -> Request:
         plen = prompt if isinstance(prompt, int) else len(prompt)

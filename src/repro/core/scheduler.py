@@ -27,8 +27,18 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.admission import AdmissionPolicy
-from repro.core.kv_cache import PagedAllocator
+from repro.core.kv_cache import KVView, PagedAllocator
 from repro.core.request import Request, State
+
+
+def victim_order(urgency: int, arrival: float, rid: int) -> Tuple:
+    """The victim total order shared by engine preemption and cluster
+    rebalancing: least urgent class first, then most recently arrived, ties
+    broken by rid (strict total order). ``max`` under this key is the
+    canonical victim — evicting (or migrating) it minimises lost work under
+    FCFS and never touches the oldest request, preserving the
+    forward-progress guarantee."""
+    return (-urgency, arrival, rid)
 
 
 @dataclasses.dataclass
@@ -162,7 +172,13 @@ class Scheduler:
                and len(self.running) < self.cfg.max_num_seqs
                and budget > 0):
             cand = self.waiting[0]
-            if not self.admission.admit(cand, self.running, self.alloc):
+            # the admission budget is judged against a frozen KV snapshot —
+            # the same decision-plane view (repro.cluster.view) the cluster
+            # policies consume — taken at this decision point (per candidate:
+            # an admitted candidate's prefill grow must be visible to the
+            # next admit, exactly as the live allocator read was)
+            if not self.admission.admit(cand, self.running,
+                                        KVView.of(self.alloc)):
                 break
             chunk = min(self.cfg.chunk_size, cand.prefill_target, budget)
             if chunk <= 0 or not self.alloc.grow(cand.rid, chunk):
@@ -205,7 +221,8 @@ class Scheduler:
         cands = [r for r in self.running if r is not exclude]
         if not cands:
             return None
-        return max(cands, key=lambda r: (-urg(r.slo_class), r.arrival, r.rid))
+        return max(cands, key=lambda r: victim_order(urg(r.slo_class),
+                                                     r.arrival, r.rid))
 
     def _preempt(self, req: Request, out: List[Request]):
         if self.emitter is not None:

@@ -17,6 +17,7 @@ Catalog (see docs/lint.md for the history behind each):
   REP007  RoutingPolicy / DispatchPolicy / AutoscalePolicy signature drift
   REP008  frozen-spec dataclass mutated outside ``__post_init__``
   REP009  MetricsLog / ClusterMetrics state mutated outside the event spine
+  REP010  live engine state read from a decision-plane (policy) module
 """
 from __future__ import annotations
 
@@ -301,12 +302,15 @@ class FloatTimeEquality(Rule):
 # call sites using keywords / subclass-agnostic wrappers drift apart
 POLICY_CONTRACTS = {
     "RoutingPolicy": {
-        "pick": "(self, workers: List[Worker], prompt_len: int, "
+        "pick": "(self, views: List[WorkerView], prompt_len: int, "
                 "max_new: int, urgency: float = 0.0) -> int",
     },
     "DispatchPolicy": {
-        "pick": "(self, workers: List[Worker], req: Request, "
+        "pick": "(self, views: List[WorkerView], req: Request, "
                 "urgency: float = 0.0) -> Optional[int]",
+    },
+    "RebalancePolicy": {
+        "decide": "(self, fleet: FleetView) -> Optional[RebalanceDecision]",
     },
     "AutoscalePolicy": {
         "desired_delta": "(self, s: ScalingSignals, n_provisioned: int) "
@@ -493,9 +497,34 @@ class MetricsBypass(Rule):
         self.generic_visit(node)
 
 
+class DecisionPlaneBypass(Rule):
+    """REP010 — policy and signal modules decide on the frozen decision
+    plane (``repro.cluster.view``): ``WorkerView``/``FleetView`` snapshots
+    are the ONLY fleet state they may read. Reaching through a live worker
+    (``.engine``, ``.alloc``, ``.sched``) re-derives KV headroom / queue
+    state at the call site — the forked-math drift the unified-view refactor
+    deleted (six modules each computing their own headroom, silently
+    disagreeing about saturation) — and reads state mid-mutation (policies
+    run inside the event loop). Add the missing field to the view instead."""
+    rule_id = "REP010"
+    title = "live engine state read from a decision-plane module"
+    paths = ("repro/cluster/policies.py", "repro/cluster/rebalance.py",
+             "repro/cluster/autoscale.py")
+    FORBIDDEN = ("engine", "alloc", "sched")
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in self.FORBIDDEN:
+            self.report(node, f"`.{node.attr}` reaches into live engine "
+                              "state from a decision-plane module; policies "
+                              "and signals read frozen WorkerView/FleetView "
+                              "snapshots (repro.cluster.view) — add the "
+                              "missing field to the view instead")
+        self.generic_visit(node)
+
+
 ALL_RULES = (UnseededRNG, WallClock, UnorderedIteration, IdAsKey,
              MutableDefault, FloatTimeEquality, PolicyConformance,
-             FrozenSpecMutation, MetricsBypass)
+             FrozenSpecMutation, MetricsBypass, DecisionPlaneBypass)
 
 
 def default_rules() -> List[Rule]:

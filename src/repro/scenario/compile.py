@@ -214,9 +214,21 @@ def to_cluster(sc: Scenario, sanitize: bool = False):
         prefix = rg.group.prefix or rg.group.role
         for i in range(rg.group.count):
             workers.append(_build_worker(r, rg, name=f"{prefix}{i}"))
+    rebalance = None
+    rebalance_every = ClusterConfig.rebalance_every_s
+    if sc.rebalance is not None:
+        from repro.cluster.rebalance import make_rebalancer
+        rb = sc.rebalance
+        rebalance = make_rebalancer(
+            rb.policy, kv_high=rb.kv_high, dst_headroom=rb.dst_headroom,
+            min_remaining=rb.min_remaining, cooldown_s=rb.cooldown_s,
+            max_inflight=rb.max_inflight)
+        rebalance_every = rb.check_every_s
     ccfg = ClusterConfig(policy=sc.routing, dispatcher=sc.dispatch,
                          transfer_dtype_bytes=sc.transfer_dtype_bytes,
-                         class_priorities=sc.class_priorities())
+                         class_priorities=sc.class_priorities(),
+                         name=sc.name, rebalance=rebalance,
+                         rebalance_every_s=rebalance_every)
     autoscaler = None
     if sc.autoscaler is not None:
         a = sc.autoscaler

@@ -12,8 +12,8 @@ import dataclasses
 from typing import Dict
 
 from repro.core.perf_model import ParallelismPlan
-from repro.scenario.spec import (Autoscaler, ModelRef, Scenario, SLOClass,
-                                 Traffic, WorkerGroup)
+from repro.scenario.spec import (Autoscaler, ModelRef, Rebalance, Scenario,
+                                 SLOClass, Traffic, WorkerGroup)
 
 INTERACTIVE = SLOClass(name="interactive", ttft_s=0.5, tpot_s=0.020,
                        priority=10)
@@ -86,6 +86,22 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
               "back, holding attainment at peak-fleet level on a fraction of "
               "the worker-seconds (the fixed-degree utilization gap the "
               "paper's fleet sizing discussion leaves on the table)"),
+    # ---- decode→decode rebalancing (benchmarks/rebalance) -----------------
+    Scenario(
+        name="ds8b-4xh200-rebalance",
+        model=ModelRef("ds-distill-8b"),
+        fleet=(WorkerGroup(role="prefill", count=1, n_pages=3000,
+                           max_seqs=64, prefix="pre"),
+               WorkerGroup(role="decode", count=3, n_pages=3000,
+                           max_seqs=64, prefix="dec")),
+        traffic=dataclasses.replace(_LONG_OPEN, rate=14.0),
+        slos=(INTERACTIVE,),
+        rebalance=Rebalance(policy="kv_pressure"),
+        notes="the disagg fleet driven past its capacity knee, with "
+              "KV-pressure rebalancing shedding load off the first decode "
+              "worker to saturate (Obs 4: the fleet tail is set by that "
+              "worker's preemption storm; benchmarks/rebalance compares "
+              "against the same fleet with the hook disabled)"),
     # ---- the 8xH200 testbed points (one per model family) -----------------
     Scenario(
         name="ds8b-8xh200-dp8",

@@ -211,6 +211,10 @@ class Autoscaler:
     scale_down_util: float = 0.35
     surge_ratio: float = 1.5      # fast/slow arrival-rate ratio that counts
                                   # as a load surge (slo_guard feedforward)
+    # opt-in slo_guard trigger: scale up when the EWMA fraction of the pool
+    # classified Capacity-Bound by the repro.obs regime rules (preemption
+    # evidence, or saturated KV while queued) exceeds this; None disables
+    capacity_frac_ceiling: Optional[float] = None
     ewma_alpha: float = 0.4
     cold_start_extra_s: float = 0.0
 
@@ -234,6 +238,55 @@ class Autoscaler:
         if self.cold_start_extra_s < 0:
             raise ValueError(f"cold_start_extra_s must be >= 0, got "
                              f"{self.cold_start_extra_s}")
+        if self.capacity_frac_ceiling is not None \
+                and not 0.0 < self.capacity_frac_ceiling <= 1.0:
+            raise ValueError(f"capacity_frac_ceiling must be in (0, 1], got "
+                             f"{self.capacity_frac_ceiling}")
+
+
+REBALANCE_POLICIES = ("kv_pressure",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rebalance:
+    """Decode→decode rebalancing (``repro.cluster.rebalance``): when a
+    decode worker's KV utilization crosses ``kv_high`` while a peer could
+    adopt one of its running requests and keep ``dst_headroom`` of its own
+    pool free, migrate that victim over the eject/KV-transfer/inject path
+    *before* the source's preemption storm (paper Obs 4 mitigation).
+    ``cooldown_s`` rate-limits decisions, ``max_inflight`` bounds concurrent
+    rebalance transfers, and ``check_every_s`` is how often the event loop
+    consults the policy on a fresh ``FleetView``."""
+    policy: str = "kv_pressure"
+    kv_high: float = 0.90         # source trigger (RegimeRules.kv_saturated)
+    dst_headroom: float = 0.10    # post-adoption pool fraction the
+                                  # destination must keep free
+    min_remaining: int = 64       # don't ship nearly-finished decodes
+    cooldown_s: float = 0.25
+    max_inflight: int = 1
+    check_every_s: float = 0.05
+
+    def __post_init__(self):
+        if self.policy not in REBALANCE_POLICIES:
+            raise ValueError(f"unknown rebalance policy {self.policy!r} "
+                             f"(have {REBALANCE_POLICIES})")
+        if not 0.0 < self.kv_high <= 1.0:
+            raise ValueError(f"kv_high must be in (0, 1], got {self.kv_high}")
+        if not 0.0 <= self.dst_headroom < 1.0:
+            raise ValueError(f"dst_headroom must be in [0, 1), got "
+                             f"{self.dst_headroom}")
+        if self.min_remaining < 1:
+            raise ValueError(f"min_remaining must be >= 1, got "
+                             f"{self.min_remaining}")
+        if self.cooldown_s < 0:
+            raise ValueError(f"cooldown_s must be >= 0, got "
+                             f"{self.cooldown_s}")
+        if self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got "
+                             f"{self.max_inflight}")
+        if self.check_every_s <= 0:
+            raise ValueError(f"check_every_s must be > 0, got "
+                             f"{self.check_every_s}")
 
 
 # --------------------------------------------------------------- diagnostics
@@ -264,6 +317,7 @@ class Scenario:
     class_kv_headroom: float = 0.0       # pool fraction only the top-urgency
                                          # SLO class may use (tier slice)
     autoscaler: Optional["Autoscaler"] = None  # elastic sizing (one role)
+    rebalance: Optional["Rebalance"] = None    # decode→decode rebalancing
     notes: str = ""
 
     def __post_init__(self):
@@ -293,6 +347,9 @@ class Scenario:
         if isinstance(self.autoscaler, dict):
             object.__setattr__(self, "autoscaler",
                                Autoscaler(**self.autoscaler))
+        if isinstance(self.rebalance, dict):
+            object.__setattr__(self, "rebalance",
+                               Rebalance(**self.rebalance))
         if self.autoscaler is not None:
             a = self.autoscaler
             grp = [g for g in self.fleet if g.role == a.role]
@@ -355,6 +412,8 @@ class Scenario:
         d["slos"] = tuple(SLOClass(**s) for s in d.get("slos", ()))
         if d.get("autoscaler") is not None:
             d["autoscaler"] = Autoscaler(**d["autoscaler"])
+        if d.get("rebalance") is not None:
+            d["rebalance"] = Rebalance(**d["rebalance"])
         return cls(**d)
 
     def to_json(self, **kw) -> str:
@@ -399,6 +458,7 @@ class Scenario:
         self._check_parallelism(cfg, add)
         self._check_traffic(add)
         self._check_autoscaler(add)
+        self._check_rebalance(add)
         if include_warnings:
             return diags
         return [d for d in diags if d.severity == "error"]
@@ -530,6 +590,19 @@ class Scenario:
             add("autoscaler_pinned", "warning", "autoscaler.max_workers",
                 f"min_workers == max_workers == {a.min_workers}: the "
                 f"controller can never act")
+
+    def _check_rebalance(self, add):
+        if self.rebalance is None:
+            return
+        # the rebalancer moves load between decode peers (or colocated peers
+        # when there is no decode pool): a singleton adopter pool can never
+        # host a migration, so the hook would tick forever for nothing
+        role = "decode" if self.disaggregated else "colocated"
+        n = sum(g.count for g in self.fleet if g.role == role)
+        if n < 2:
+            add("rebalance_singleton_pool", "warning", "rebalance.policy",
+                f"rebalancing needs >= 2 {role} workers to migrate between; "
+                f"the fleet has {n} — the policy can never act")
 
     # ------------------------------------------------------------ compilers
     # Thin delegates so a spec in hand is one call away from any fidelity

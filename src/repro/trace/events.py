@@ -39,12 +39,14 @@ from typing import Any, Callable, Dict, List, Optional
 #   drained       runtime (drain done)     replica went dark, t_retire stamped
 #   scale_decision autoscaler.tick         controller resolved a nonzero delta
 #   kv_transfer   runtime (harvest)        migration in flight (src, ready)
+#   rebalance     runtime (rebalance tick) decode→decode migration decided
+#                                          (src pressure, dst, victim rid)
 #   run_end       runtime.run              fleet drained, makespan stamped
 KINDS = (
     "arrival", "admit", "resume", "prefill", "decode_step", "preempt",
     "eject", "inject", "finish", "kv_alloc", "kv_free", "step",
     "mint", "join", "retire", "drained", "scale_decision", "kv_transfer",
-    "run_end",
+    "rebalance", "run_end",
 )
 _KIND_SET = frozenset(KINDS)
 

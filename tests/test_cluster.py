@@ -164,71 +164,92 @@ def test_migrated_timestamps_monotone():
 
 
 # ------------------------------------------------------------------ policies
-def test_memory_aware_warmup_no_spurious_straggle():
+def test_straggler_warmup_no_spurious_straggle():
     """Regression: the lazily-grown EWMA table held 0.0 for workers that
     never stepped, dragging the fleet mean down — the first active worker was
     charged a straggler penalty at warmup while never-stepped workers got 0.0
-    straggle for free."""
-    pol = MemoryAware()
+    straggle for free. The EWMA now lives in the runtime-owned
+    StragglerTracker and reaches policies as ``WorkerView.step_ewma``."""
+    from repro.cluster.policies import relative_straggle
+    from repro.cluster.view import StragglerTracker, snapshot
+    ws = _workers("colocated", n=3)
+    tr = StragglerTracker()
     for _ in range(3):
-        pol.note_step("co1", 0.010)
+        tr.note_step("co1", 0.010)
+    views = [snapshot(w, straggler=tr) for w in ws]
+    v = {u.name: u for u in views}
     # the sole observed worker IS the fleet mean: zero straggle, not +1.0
-    assert pol._straggle("co1") == pytest.approx(0.0)
+    assert relative_straggle(v["co1"], views) == pytest.approx(0.0)
     # unobserved workers have no data — no reward (was -1.0), no penalty
-    assert pol._straggle("co0") == 0.0
-    assert pol._straggle("co2") == 0.0
+    assert relative_straggle(v["co0"], views) == 0.0
+    assert relative_straggle(v["co2"], views) == 0.0
     # the first observation seeds the EWMA (no bias toward zero at warmup)
-    pol2 = MemoryAware(ewma_alpha=0.2)
-    pol2.note_step("co0", 0.040)
-    assert pol2._lat_ewma["co0"] == pytest.approx(0.040)
+    tr2 = StragglerTracker(alpha=0.2)
+    tr2.note_step("co0", 0.040)
+    assert tr2.get("co0") == pytest.approx(0.040)
     # and warmup must not skew routing: equal-headroom fleet, only worker 0
     # observed — the pick must not avoid (or favour) it for straggle reasons
-    ws = _workers("colocated", n=3)
-    pol3 = MemoryAware()
-    pol3.note_step("co0", 0.020)
-    pol3.pick(ws, 100, 400)
-    assert pol3._straggle("co0", [w.name for w in ws]) == pytest.approx(0.0)
+    tr3 = StragglerTracker()
+    tr3.note_step("co0", 0.020)
+    views3 = [snapshot(w, straggler=tr3) for w in ws]
+    MemoryAware().pick(views3, 100, 400)
+    assert relative_straggle(views3[0], views3) == pytest.approx(0.0)
 
 
 def test_memory_aware_straggler_penalty_is_scalar():
     """Regression (old tuple-key bug): a slow replica with EQUAL headroom
     must be avoided — the straggler term must influence the score even when
     headrooms differ slightly in its favour."""
+    from repro.cluster.view import StragglerTracker, snapshot
     ws = _workers("colocated", n=2)
-    pol = MemoryAware(straggler_penalty=2.0, ewma_alpha=0.2)
+    tr = StragglerTracker(alpha=0.2)
+    pol = MemoryAware(straggler_penalty=2.0)
     # equal headroom; replica 0 is 5x slower per step
     for _ in range(20):
-        pol.note_step("co0", 0.050)
-        pol.note_step("co1", 0.010)
-    assert pol.pick(ws, 100, 400) == 1
+        tr.note_step("co0", 0.050)
+        tr.note_step("co1", 0.010)
+    views = [snapshot(w, straggler=tr) for w in ws]
+    assert pol.pick(views, 100, 400) == 1
     # and the penalty folds into ONE scalar: a slightly fuller fast replica
-    # still beats a much slower emptier one
+    # still beats a much slower emptier one (fresh views see the grow —
+    # decision sites rebuild views per decision)
     ws[1].engine.alloc.grow(999, 16 * 40)      # shrink replica 1's headroom
-    assert pol.pick(ws, 100, 400) == 1
+    views = [snapshot(w, straggler=tr) for w in ws]
+    assert pol.pick(views, 100, 400) == 1
 
 
-def test_memory_aware_straggle_keyed_by_name_survives_pool_mutation():
+def test_straggle_keyed_by_name_survives_pool_mutation():
     """Autoscaling mutates the pool mid-run: a retired worker's latency
     history must not transfer to whichever replica inherits its slot, and
     the fleet mean must be computed over the *current* pool's observed
     members — a long-retired straggler must not drag the reference mean."""
-    pol = MemoryAware()
+    from repro.cluster.policies import relative_straggle
+    from repro.cluster.view import StragglerTracker, snapshot
+    ws = _workers("colocated", n=3)
+    tr = StragglerTracker()
     for _ in range(5):
-        pol.note_step("co0", 0.050)       # straggler
-        pol.note_step("co1", 0.010)
-        pol.note_step("co2", 0.010)
-    # co0 retires: current pool excludes it — co1/co2 are mutually average
-    assert pol._straggle("co1", ["co1", "co2"]) == pytest.approx(0.0)
+        tr.note_step("co0", 0.050)        # straggler
+        tr.note_step("co1", 0.010)
+        tr.note_step("co2", 0.010)
+    views = [snapshot(w, straggler=tr) for w in ws]
+    v = {u.name: u for u in views}
+    # co0 retires: the current pool's views exclude it — co1/co2 are
+    # mutually average
+    assert relative_straggle(v["co1"],
+                             [v["co1"], v["co2"]]) == pytest.approx(0.0)
     # with co0 in the pool, co1 is faster than the mean (negative straggle)
-    assert pol._straggle("co1", ["co0", "co1", "co2"]) < 0
-    pol.forget("co0")
-    assert "co0" not in pol._lat_ewma
+    assert relative_straggle(v["co1"], views) < 0
+    tr.forget("co0")
+    assert tr.get("co0") is None
     # a fresh replica reusing the name starts with no history
-    assert pol._straggle("co0", ["co0", "co1", "co2"]) == 0.0
+    fresh = snapshot(ws[0], straggler=tr)
+    assert fresh.step_ewma is None
+    assert relative_straggle(fresh, [fresh, v["co1"], v["co2"]]) == 0.0
 
 
 def test_dispatcher_least_headroom_best_fit():
     from repro.cluster.policies import LeastKVHeadroom
+    from repro.cluster.view import snapshot
     ws = [make_sim_worker(CFG, PLAN, role="decode", name=f"d{i}",
                           n_pages=50) for i in range(3)]
 
@@ -244,7 +265,8 @@ def test_dispatcher_least_headroom_best_fit():
     cand.generated = 1
     # candidate needs pages_for(200+99+1) = 19 pages: d0 can't fit;
     # best fit among {d1, d2} is the fuller d1
-    assert ws[LeastKVHeadroom().pick(ws, cand)].name == "d1"
+    views = [snapshot(w) for w in ws]
+    assert ws[LeastKVHeadroom().pick(views, cand)].name == "d1"
 
 
 def test_small_prefill_pool_accepts_long_decode_requests():

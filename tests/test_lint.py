@@ -121,7 +121,7 @@ def test_rep006_clean_on_tolerance_and_none():
 ROUTING_BASE = (
     "from typing import List\n"
     "class RoutingPolicy:\n"
-    "    def pick(self, workers: List[Worker], prompt_len: int,\n"
+    "    def pick(self, views: List[WorkerView], prompt_len: int,\n"
     "             max_new: int, urgency: float = 0.0) -> int:\n"
     "        raise NotImplementedError\n")
 
@@ -129,15 +129,23 @@ ROUTING_BASE = (
 def test_rep007_fires_on_signature_drift():
     drifted = ROUTING_BASE + (
         "class Mine(RoutingPolicy):\n"
-        "    def pick(self, workers, prompt_len, max_new, urgency=0.0):\n"
+        "    def pick(self, views, prompt_len, max_new, urgency=0.0):\n"
         "        return 0\n")
+    assert "REP007" in _ids(drifted, path=OTHER_PATH)
+
+
+def test_rep007_fires_on_rebalance_contract_drift():
+    drifted = (
+        "class RebalancePolicy:\n"
+        "    def decide(self, fleet):\n"
+        "        raise NotImplementedError\n")
     assert "REP007" in _ids(drifted, path=OTHER_PATH)
 
 
 def test_rep007_clean_on_exact_conformance():
     conforming = ROUTING_BASE + (
         "class Mine(RoutingPolicy):\n"
-        "    def pick(self, workers: List[Worker], prompt_len: int,\n"
+        "    def pick(self, views: List[WorkerView], prompt_len: int,\n"
         "             max_new: int, urgency: float = 0.0) -> int:\n"
         "        return 0\n")
     assert "REP007" not in _ids(conforming, path=OTHER_PATH)
@@ -194,6 +202,33 @@ def test_rep009_clean_on_reads_and_consumer_modules():
     # and launch-side scripts are outside REP009's scope entirely
     assert "REP009" not in _ids("eng.metrics.finish(r, t=0)\n",
                                 path=LAUNCH_PATH)
+
+
+def test_rep010_fires_on_engine_access_in_decision_modules():
+    fires = (
+        "def pick(views):\n    return views[0].engine.alloc.free_pages\n",
+        "cap = w.engine.alloc.n_pages * w.engine.alloc.page_size\n",
+        "q = len(w.engine.sched.waiting)\n",
+    )
+    for path in ("repro/cluster/policies.py", "repro/cluster/rebalance.py",
+                 "repro/cluster/autoscale.py"):
+        for src in fires:
+            assert "REP010" in _ids(src, path=path), (path, src)
+
+
+def test_rep010_clean_on_views_and_out_of_scope_modules():
+    clean = (
+        "head = v.predicted_headroom_pages() - v.candidate_pages(p, m)\n",
+        "ok = v.kv_util >= 0.9 and v.n_waiting > 0\n",
+        "pool = fleet.pool('decode')\n",
+    )
+    for src in clean:
+        assert "REP010" not in _ids(src, path="repro/cluster/policies.py"), \
+            src
+    # the view builder and the runtime are the legal engine readers
+    raw = "kv = w.engine.alloc.utilization()\n"
+    assert "REP010" not in _ids(raw, path="repro/cluster/view.py")
+    assert "REP010" not in _ids(raw, path="repro/cluster/runtime.py")
 
 
 # ------------------------------------------------------------- suppressions

@@ -1,0 +1,366 @@
+"""Decision plane: frozen WorkerView/FleetView snapshots, view purity,
+typed infeasibility, decode→decode rebalancing, and the Capacity-Bound
+scaling signal."""
+import dataclasses
+
+import pytest
+
+from repro.configs.paper_models import DS_DISTILL_8B
+from repro.core import perf_model as pm
+from repro.core.kv_cache import KVView
+from repro.cluster import (ClusterConfig, ClusterRuntime, KVPressureRebalancer,
+                           NoFeasibleWorker, RebalanceDecision, StragglerTracker,
+                           eligible_indices, fleet_snapshot, make_sim_worker,
+                           snapshot)
+from repro.cluster.autoscale import SLOGuard, ScalingSignals
+from repro.cluster.view import FleetView, RequestView, WorkerView
+
+CFG = DS_DISTILL_8B
+PLAN = pm.ParallelismPlan()
+
+
+def _worker(name="w0", role="colocated", n_pages=3000, max_seqs=64):
+    return make_sim_worker(CFG, PLAN, role=role, name=name, n_pages=n_pages,
+                           max_seqs=max_seqs)
+
+
+def _busy_worker(name="w0", n_reqs=6, steps=40):
+    """A worker stopped mid-run: running + waiting + gated arrivals, so a
+    snapshot exercises every field."""
+    w = _worker(name)
+    for i in range(n_reqs):
+        w.engine.submit(400 + 40 * i, 200, arrival=0.01 * i)
+    w.engine.submit(300, 100, arrival=10 ** 6)   # gated: engine-level work
+    w.engine.run(max_steps=steps)
+    return w
+
+
+def _engine_fingerprint(w):
+    e = w.engine
+    return (
+        e.now, e.alloc.used_pages, e.alloc.free_pages,
+        tuple((r.rid, r.generated, r.context_len, r.prefill_done)
+              for r in e.sched.running),
+        tuple((r.rid, r.slo_class) for r in e.sched.waiting),
+        e.sched.n_preemptions, len(e.metrics.finished), len(e._pending),
+    )
+
+
+# ----------------------------------------------------------------- snapshots
+def test_snapshot_reflects_engine_state():
+    w = _busy_worker()
+    v = snapshot(w)
+    e = w.engine
+    assert v.name == "w0" and v.role == "colocated"
+    assert v.now == e.now
+    assert v.n_running == len(e.sched.running)
+    assert v.n_waiting == len(e.sched.waiting)
+    assert v.kv_util == e.alloc.utilization()
+    assert v.capacity_tokens == e.alloc.n_pages * e.alloc.page_size
+    assert v.queue_depth == v.n_running + v.n_waiting
+    assert v.max_seqs == 64 and not v.warming and not v.draining
+    # gated far-future arrival: engine has work the scheduler can't see
+    assert v.has_work and (v.sched_has_work
+                           == bool(e.sched.waiting or e.sched.running))
+    assert len(v.running_reqs) == v.n_running
+    for rv in v.running_reqs:
+        assert rv.remaining >= 0 and rv.context_len >= rv.isl
+
+
+def test_view_construction_and_reading_are_pure():
+    """Building and fully reading views never mutates engine state — the
+    decision plane is observation-only."""
+    ws = [_busy_worker(f"co{i}") for i in range(3)]
+    rt = ClusterRuntime(ws, ClusterConfig())
+    before = [_engine_fingerprint(w) for w in ws]
+    for _ in range(2):                      # twice: idempotent observation
+        fleet = fleet_snapshot(rt)
+        for v in fleet.workers:
+            (v.n_pages, v.page_size, v.capacity_tokens, v.queue_depth,
+             v.kv_util, v.predicted_headroom_pages(), v.fits(500, 200),
+             v.pages_for(777), v.candidate_pages(500, 200),
+             v.waiting_by_class, v.running_reqs, v.step_ewma)
+        (fleet.pool("colocated"), fleet.warming_count("colocated"),
+         fleet.worker("co1"), fleet.inflight_migrations,
+         fleet.inflight_rebalances, fleet.arrivals, fleet.finished)
+    assert [_engine_fingerprint(w) for w in ws] == before
+
+
+def test_views_are_frozen_snapshots():
+    w = _busy_worker()
+    v = snapshot(w)
+    util_then = v.kv_util
+    w.engine.alloc.grow(10 ** 6, 3 * w.engine.alloc.page_size)
+    assert v.kv_util == util_then           # old view keeps old state
+    assert snapshot(w).kv_util > util_then  # fresh view sees the growth
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        v.kv_util = 0.0
+
+
+def test_interleaved_view_building_is_inert_on_event_stream():
+    """A run that builds (and fully reads) a FleetView on every event is
+    event-stream- and summary-identical to a plain run — the acceptance
+    bar for putting observation inside the event loop. The observed run
+    also carries the sim sanitizer, which asserts loop invariants around
+    every view build."""
+    from repro.scenario import get_scenario
+    sc = get_scenario("ds8b-4xh200-mixed")
+    sc = dataclasses.replace(sc, traffic=dataclasses.replace(
+        sc.traffic, n_requests=12))
+
+    def run(observe):
+        rt = sc.to_cluster(sanitize=observe)
+        rt.events.enable_recording()
+        if observe:
+            def spy(ev, _rt=rt):
+                fleet = _rt.fleet_view()
+                for v in fleet.workers:
+                    (v.kv_util, v.predicted_headroom_pages(),
+                     v.queue_depth, v.fits(100, 10))
+            rt.events.subscribe(spy)
+        rt.submit_trace(sc.trace())
+        m = rt.run()
+        return m.summary(slo=sc.slo_map()), [e.to_dict()
+                                             for e in rt.events.events]
+
+    s_plain, ev_plain = run(observe=False)
+    s_spied, ev_spied = run(observe=True)
+    assert s_plain == s_spied
+    assert ev_plain == ev_spied
+
+
+# ------------------------------------------------------------- infeasibility
+def test_no_feasible_worker_carries_request_context():
+    ws = [_worker("tiny0", n_pages=8), _worker("tiny1", n_pages=4)]
+    views = [snapshot(w) for w in ws]
+    with pytest.raises(NoFeasibleWorker) as ei:
+        eligible_indices(views, 900, 300)
+    e = ei.value
+    assert isinstance(e, ValueError)        # old callers keep catching it
+    assert e.prompt_len == 900 and e.max_new == 300
+    assert dict(e.capacities) == {"tiny0": 8 * views[0].page_size,
+                                  "tiny1": 4 * views[1].page_size}
+    assert "900 in" in str(e) and "tiny1" in str(e)
+    rich = e.with_context(rid=7, scenario="unit", arrival=1.5,
+                          slo_class="interactive")
+    assert rich.rid == 7 and rich.scenario == "unit"
+    assert "rid=7" in str(rich) and "'unit'" in str(rich)
+    assert "t=1.5" in str(rich) and "interactive" in str(rich)
+
+
+def test_runtime_surfaces_scenario_name_on_infeasible_route():
+    """A route that becomes infeasible mid-run (the only big replica
+    retired) aborts with the scenario name and arrival attached."""
+    big, small = _worker("big", n_pages=3000), _worker("small", n_pages=16)
+    rt = ClusterRuntime([big, small], ClusterConfig(name="hetero-unit"))
+    rt.submit(600, 200, arrival=1.0, slo_class="x")  # fits only `big`
+    rt.retire_worker(worker=big, at=0.0)
+    with pytest.raises(NoFeasibleWorker) as ei:
+        rt.run()
+    e = ei.value
+    assert e.scenario == "hetero-unit"
+    assert e.arrival == 1.0 and e.slo_class == "x"
+    assert dict(e.capacities) == {"small": 16 * 16}
+
+
+# ---------------------------------------------------------------- rebalancer
+def _wv(name, kv_util=0.5, n_running=4, running=(), role="decode",
+        n_pages=100, page_size=16, max_seqs=8, draining=False,
+        predicted_used=None):
+    used = int(kv_util * n_pages)
+    return WorkerView(
+        name=name, role=role, prefill_only=False, warming=False,
+        draining=draining, now=0.0, has_work=True, sched_has_work=True,
+        kv=KVView(n_pages=n_pages, page_size=page_size, used_pages=used,
+                  free_pages=n_pages - used),
+        kv_util=kv_util,
+        predicted_used=used if predicted_used is None else predicted_used,
+        osl_est=200.0, n_running=n_running, n_waiting=0, max_seqs=max_seqs,
+        preemptions=0, step_ewma=None, waiting_by_class=(),
+        running_reqs=tuple(running))
+
+
+def _rv(rid, urgency=0, arrival=0.0, generated=10, remaining=200,
+        prefill_done=True):
+    return RequestView(rid=rid, slo_class="", urgency=urgency,
+                       arrival=arrival, isl=100, generated=generated,
+                       context_len=100 + generated, remaining=remaining,
+                       prefill_done=prefill_done)
+
+
+def _fleet(workers, t=10.0, inflight_rebalances=0):
+    return FleetView(
+        t=t, workers=tuple(workers),
+        pools=(("prefill", ()), ("colocated", ()),
+               ("decode", tuple(range(len(workers))))),
+        inflight_rebalances=inflight_rebalances)
+
+
+def test_rebalancer_decides_off_most_pressured_worker():
+    rb = KVPressureRebalancer()
+    victims = (_rv(1, arrival=0.0), _rv(2, arrival=5.0))  # 2: most recent
+    fleet = _fleet([_wv("dec0", kv_util=0.95, running=victims),
+                    _wv("dec1", kv_util=0.92, running=(_rv(3),)),
+                    _wv("dec2", kv_util=0.20, n_running=1)])
+    d = rb.decide(fleet)
+    assert d is not None
+    assert d.src == "dec0" and d.dst == "dec2" and d.rid == 2
+    assert d.kv_util == 0.95 and "dec2" in d.reason
+
+
+def test_rebalancer_gates():
+    victims = (_rv(1), _rv(2))
+    pressured = _wv("dec0", kv_util=0.95, running=victims)
+    idle = _wv("dec1", kv_util=0.2, n_running=1)
+    # below threshold: no decision
+    assert KVPressureRebalancer().decide(
+        _fleet([_wv("dec0", kv_util=0.5, running=victims), idle])) is None
+    # inflight cap
+    assert KVPressureRebalancer(max_inflight=1).decide(
+        _fleet([pressured, idle], inflight_rebalances=1)) is None
+    # singleton pool
+    assert KVPressureRebalancer().decide(_fleet([pressured])) is None
+    # cooldown: a decision at t blocks the next until t + cooldown_s
+    rb = KVPressureRebalancer(cooldown_s=5.0)
+    assert rb.decide(_fleet([pressured, idle], t=10.0)) is not None
+    assert rb.decide(_fleet([pressured, idle], t=12.0)) is None
+    assert rb.decide(_fleet([pressured, idle], t=15.1)) is not None
+
+
+def test_rebalancer_victim_eligibility():
+    idle = _wv("dec1", kv_util=0.2, n_running=1)
+    # mid-prefill and nearly-finished requests are never shipped
+    bad = (_rv(1, prefill_done=False), _rv(2, remaining=3))
+    assert KVPressureRebalancer(min_remaining=64).decide(
+        _fleet([_wv("dec0", kv_util=0.95, running=bad), idle])) is None
+    # victim order matches engine preemption: least urgent class first,
+    # most recently arrived within a class
+    mixed = (_rv(1, urgency=5, arrival=9.0), _rv(2, urgency=0, arrival=1.0),
+             _rv(3, urgency=0, arrival=2.0))
+    d = KVPressureRebalancer().decide(
+        _fleet([_wv("dec0", kv_util=0.95, running=mixed), idle]))
+    assert d.rid == 3
+
+
+def test_rebalancer_destination_needs_post_adoption_headroom():
+    pressured = _wv("dec0", kv_util=0.95, running=(_rv(1), _rv(2)))
+    # peer at 0.85: adopting ~14 pages of victim leaves < 10% headroom
+    assert KVPressureRebalancer(dst_headroom=0.10).decide(
+        _fleet([pressured, _wv("dec1", kv_util=0.85)])) is None
+    # draining and batch-full peers are skipped even with room
+    assert KVPressureRebalancer().decide(
+        _fleet([pressured, _wv("dec1", kv_util=0.1, draining=True)])) is None
+    assert KVPressureRebalancer().decide(
+        _fleet([pressured,
+                _wv("dec1", kv_util=0.1, n_running=8, max_seqs=8)])) is None
+    # among viable peers, most post-adoption headroom wins
+    d = KVPressureRebalancer().decide(
+        _fleet([pressured, _wv("dec1", kv_util=0.5), _wv("dec2",
+                                                         kv_util=0.3)]))
+    assert d.dst == "dec2"
+
+
+def test_rebalance_end_to_end_relieves_pressure():
+    """Registry scenario at a CI-scale count: rebalancing fires, migrates
+    over the standard eject/transfer/inject path, and strictly reduces
+    fleet preemptions vs the identical trace without the hook."""
+    from repro.scenario import get_scenario
+    sc = get_scenario("ds8b-4xh200-rebalance")
+    sc = dataclasses.replace(sc, traffic=dataclasses.replace(
+        sc.traffic, n_requests=40))
+
+    def run(s):
+        rt = s.to_cluster(sanitize=True)
+        rt.events.enable_recording()
+        rt.submit_trace(s.trace())
+        m = rt.run()
+        summ = m.summary(slo=s.slo_map())
+        return rt, summ
+
+    rt_on, s_on = run(sc)
+    _, s_off = run(dataclasses.replace(sc, rebalance=None))
+    reb = [e for e in rt_on.events.events if e.kind == "rebalance"]
+    assert reb, "scenario never pressured a decode worker past kv_high"
+    for ev in reb:
+        d = ev.to_dict()["payload"]
+        assert d["src"] != d["dst"] and d["kv_util"] >= 0.90 and d["reason"]
+    pre_on = sum(w["preemptions"] for w in s_on["workers"].values())
+    pre_off = sum(w["preemptions"] for w in s_off["workers"].values())
+    assert pre_on < pre_off
+    assert s_on["slo_attainment"] >= s_off["slo_attainment"]
+    assert s_on["n_finished"] == 40        # every migrated request finishes
+
+
+def test_rebalance_decision_on_stale_view_is_dropped():
+    """The policy decides on a frozen view; if the fleet moved on (victim
+    finished, destination retired), actuation silently drops the decision
+    instead of corrupting state."""
+    ws = [_worker(f"dec{i}", role="decode") for i in range(2)]
+    ws.insert(0, _worker("pre0", role="prefill"))
+    rt = ClusterRuntime(ws, ClusterConfig())
+
+    class Stale:
+        def decide(self, fleet):
+            return RebalanceDecision(rid=10 ** 9, src="dec0", dst="dec1")
+    rt.rebalancer = Stale()
+    rt._apply_rebalance(RebalanceDecision(rid=10 ** 9, src="dec0",
+                                          dst="dec1"))
+    rt._apply_rebalance(RebalanceDecision(rid=0, src="ghost", dst="dec1"))
+    assert not rt._migrating
+
+
+# ------------------------------------------------- capacity-bound signal
+def test_capacity_frac_fires_a_tick_before_kv_ewma():
+    """One replica's preemption storm flips the Capacity-Bound fraction
+    immediately, while the pool-mean KV EWMA is still averaging the storm
+    away — the guard with the regime trigger scales up a tick earlier."""
+    # tick 0: calm; tick 1: one of two replicas storms (fraction 0.5, KV
+    # mean still mid-band); tick 2: the mean itself finally crosses
+    obs = ({"kv_util": 0.50, "capacity_frac": 0.0},
+           {"kv_util": 0.65, "capacity_frac": 0.5},
+           {"kv_util": 0.92, "capacity_frac": 0.5})
+
+    def first_fire(guard):
+        s = ScalingSignals(ewma_alpha=1.0)   # raw per-tick values
+        for i, ob in enumerate(obs):
+            s.observe(**ob)
+            if guard.desired_delta(s, 2) > 0:
+                return i
+        return None
+
+    plain = first_fire(SLOGuard())
+    regime = first_fire(SLOGuard(capacity_frac_ceiling=0.25))
+    assert plain == 2 and regime == 1
+    # ceiling=None is bit-identical to the pre-regime controller
+    assert first_fire(SLOGuard(capacity_frac_ceiling=None)) == plain
+
+
+def test_controller_capacity_bound_evidence_from_views():
+    """The controller's per-worker Capacity-Bound test uses the repro.obs
+    evidence on view fields: preemptions since last tick, or saturated KV
+    while requests queue."""
+    from repro.cluster.autoscale import AutoscaleController
+    c = AutoscaleController(SLOGuard(), worker_factory=lambda: None,
+                            role="decode")
+    calm = _wv("dec0", kv_util=0.5)
+    assert not c._capacity_bound(calm)
+    stormed = dataclasses.replace(calm, preemptions=3)
+    assert c._capacity_bound(stormed)
+    c._last_preempt["dec0"] = 3             # storm already accounted
+    assert not c._capacity_bound(stormed)
+    throttled = dataclasses.replace(calm, kv_util=0.93)
+    assert not c._capacity_bound(throttled)          # saturated but no queue
+    queued = dataclasses.replace(throttled, n_waiting=2)
+    assert c._capacity_bound(queued)
+
+
+def test_straggler_tracker_validation():
+    with pytest.raises(ValueError):
+        StragglerTracker(alpha=0.0)
+    tr = StragglerTracker(alpha=0.5)
+    tr.note_step("w", 1.0)
+    assert tr.get("w") == 1.0               # first observation seeds
+    tr.note_step("w", 3.0)
+    assert tr.get("w") == 2.0
+    tr.forget("w")
+    assert tr.get("w") is None
